@@ -1,0 +1,122 @@
+"""Beyond-paper ablations (§Ablations in EXPERIMENTS.md).
+
+1. **Selection strategy** — isolates WHY FedBack wins: `fedback`
+   (adaptive deterministic) vs `round_robin` (deterministic, not
+   adaptive) vs `random` (FedADMM) vs `bernoulli` (unreliable clients).
+   If determinism alone explained the variance reduction, round-robin
+   would match FedBack; the trigger's state-awareness is the remainder.
+2. **Trigger metric** — Remark 3 allows any metric with bounded
+   gradients: l2 (paper) vs l∞ vs cosine.
+3. **Controller variant** — the faithful integral law uses the
+   *pre-update* load L^k (Eq. 3.3); `use_filtered_error=True` uses
+   L^{k+1} (a PI-flavored variant).
+
+    PYTHONPATH=src python -m benchmarks.ablations
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import paper_mnist
+from repro.core import (
+    ControllerConfig,
+    init_state,
+    make_eval_fn,
+    make_round_fn,
+    realized_rate,
+)
+from repro.data import federated_arrays, make_synthetic_mnist
+from repro.models.mlp import (
+    init_mlp,
+    make_loss_and_acc_fn,
+    make_loss_fn,
+    mlp_logits,
+)
+
+CACHE = os.path.join(
+    os.environ.get("REPRO_PAPER_CACHE", "experiments/paper"), "ablations")
+
+
+def _run(cfg, data, test, params0, loss_fn, eval_fn, rounds=200):
+    state = init_state(cfg, params0)
+    round_fn = make_round_fn(cfg, loss_fn, data)
+    events, accs = [], []
+    for k in range(rounds):
+        state, m = round_fn(state)
+        events.append(int(m.num_events))
+        if k % 4 == 0 or k == rounds - 1:
+            _, acc = eval_fn(state, test["x"], test["y"])
+            accs.append((k, float(acc)))
+    rate = float(np.asarray(realized_rate(state.ctrl)).mean())
+    tail = np.asarray([a for _, a in accs])[len(accs) // 2:]
+    return {
+        "events_total": int(np.sum(events)),
+        "final_acc": accs[-1][1],
+        "best_acc": max(a for _, a in accs),
+        "realized_rate": rate,
+        "tail_step_var": float(np.var(np.diff(tail))),
+        "events_to_90": next(
+            (int(np.cumsum(events)[k]) for k, a in accs if a >= 0.9), None),
+    }
+
+
+def run(rounds=200, n_clients=32, rate=0.15, print_fn=print,
+        use_cache=True):
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"abl_N{n_clients}_r{rounds}_L{rate}.json")
+    if use_cache and os.path.exists(path):
+        with open(path) as f:
+            rows = json.load(f)
+    else:
+        ds = make_synthetic_mnist(n_train=6400, n_test=1500)
+        data, test = federated_arrays(ds, n_clients=n_clients,
+                                      scheme="label_shard")
+        params0 = init_mlp(jax.random.PRNGKey(0))
+        loss_fn = make_loss_fn(mlp_logits)
+        eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits))
+        base = paper_mnist.fl_config("fedback", rate, n_clients=n_clients)
+
+        variants = {
+            # 1. selection strategies
+            "fedback(l2)": base,
+            "round_robin": dataclasses.replace(base, selection="round_robin"),
+            "random": dataclasses.replace(base, selection="random"),
+            "bernoulli": dataclasses.replace(base, selection="bernoulli"),
+            # 2. trigger metrics (Remark 3)
+            "fedback(linf)": dataclasses.replace(
+                base, trigger_metric="linf",
+                controller=ControllerConfig(K=0.02, alpha=0.9)),
+            "fedback(cosine)": dataclasses.replace(
+                base, trigger_metric="cosine",
+                controller=ControllerConfig(K=0.005, alpha=0.9)),
+            # 3. controller error-signal variant
+            "fedback(PI-filtered)": dataclasses.replace(
+                base, controller=ControllerConfig(
+                    K=2.0, alpha=0.9, use_filtered_error=True)),
+            # 4. no warm start (faithful-ADMM footnote-2 ablation)
+            "fedback(cold-start)": dataclasses.replace(
+                base, warm_start=False),
+        }
+        rows = {}
+        for name, cfg in variants.items():
+            rows[name] = _run(cfg, data, test, params0, loss_fn, eval_fn,
+                              rounds)
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+    print_fn("ablation,variant,events_total,events_to_90,final_acc,"
+             "realized_rate,tail_step_var")
+    for name, r in rows.items():
+        print_fn(f"ablation,{name},{r['events_total']},"
+                 f"{r['events_to_90']},{r['final_acc']:.4f},"
+                 f"{r['realized_rate']:.4f},{r['tail_step_var']:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

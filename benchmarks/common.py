@@ -1,0 +1,156 @@
+"""Shared experiment runner for the paper-reproduction benchmarks.
+
+One sweep = (dataset, algorithm, L̄) → per-round traces (events,
+accuracy, losses, controller state).  Table 1 (events-to-accuracy),
+Table 2 (realized participation) and Fig. 1 (accuracy curves/variance)
+are all views over the same traces, which are cached as JSON under
+``experiments/paper/`` so the three benchmarks never recompute a run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import paper_cifar, paper_mnist
+from repro.core import init_state, make_eval_fn, make_round_fn
+from repro.data import federated_arrays, make_synthetic_cifar, \
+    make_synthetic_mnist
+from repro.models.mlp import (
+    cnn_logits,
+    init_cnn,
+    init_mlp,
+    make_loss_and_acc_fn,
+    make_loss_fn,
+    mlp_logits,
+)
+
+CACHE_DIR = os.environ.get("REPRO_PAPER_CACHE", "experiments/paper")
+
+# quick preset: CI-sized but same structure; paper preset: §5 scale
+PRESETS = {
+    "quick": dict(n_clients=32, n_train=6400, n_test=1500, max_rounds=220,
+                  eval_every=4, rates=(0.1, 0.2), seeds=(0,),
+                  per_dataset={"cifar": dict(n_train=4000, max_rounds=120,
+                                             eval_every=6)}),
+    "mid": dict(n_clients=64, n_train=12000, n_test=2000, max_rounds=600,
+                eval_every=5, rates=(0.05, 0.1, 0.2, 0.4), seeds=(0,)),
+    "paper": dict(n_clients=100, n_train=12000, n_test=2000,
+                  max_rounds=1500, eval_every=5,
+                  rates=(0.05, 0.1, 0.15, 0.2, 0.4, 0.6), seeds=(0,)),
+}
+
+ALGORITHMS = ("fedback", "fedadmm", "fedavg", "fedprox")
+
+
+def _apply_per_dataset(preset: dict, dataset: str) -> dict:
+    p = dict(preset)
+    p.update(p.pop("per_dataset", {}).get(dataset, {}))
+    return p
+
+
+def _setup(dataset: str, preset: dict, seed: int):
+    if dataset == "mnist":
+        ds = make_synthetic_mnist(preset["n_train"], preset["n_test"])
+        data, test = federated_arrays(ds, n_clients=preset["n_clients"],
+                                      scheme="label_shard", seed=seed)
+        params0 = init_mlp(jax.random.PRNGKey(seed))
+        loss_fn = make_loss_fn(mlp_logits)
+        eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits))
+        mkcfg = paper_mnist.fl_config
+        target = paper_mnist.TARGET_ACCURACY
+    elif dataset == "cifar":
+        ds = make_synthetic_cifar(preset["n_train"], preset["n_test"])
+        data, test = federated_arrays(ds, n_clients=preset["n_clients"],
+                                      scheme="dirichlet",
+                                      beta=paper_cifar.DIRICHLET_BETA,
+                                      seed=seed)
+        params0 = init_cnn(jax.random.PRNGKey(seed))
+        loss_fn = make_loss_fn(cnn_logits)
+        eval_fn = make_eval_fn(make_loss_and_acc_fn(cnn_logits))
+        mkcfg = paper_cifar.fl_config
+        target = paper_cifar.TARGET_ACCURACY
+    else:
+        raise ValueError(dataset)
+    return data, test, params0, loss_fn, eval_fn, mkcfg, target
+
+
+def run_sweep(dataset: str, algorithm: str, rate: float, *,
+              preset_name: str = "quick", seed: int = 0,
+              use_cache: bool = True) -> dict:
+    """Run (or load) one FL trajectory; returns the trace dict."""
+    preset = _apply_per_dataset(PRESETS[preset_name], dataset)
+    tag = f"{dataset}_{algorithm}_L{rate}_{preset_name}_s{seed}"
+    path = os.path.join(CACHE_DIR, tag + ".json")
+    if use_cache and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    data, test, params0, loss_fn, eval_fn, mkcfg, target = _setup(
+        dataset, preset, seed)
+    cfg = mkcfg(algorithm=algorithm, participation=rate,
+                n_clients=preset["n_clients"], seed=seed)
+    state = init_state(cfg, params0)
+    round_fn = make_round_fn(cfg, loss_fn, data)
+
+    events_per_round, acc_trace, loss_trace, load_trace = [], [], [], []
+    event_counts = np.zeros(preset["n_clients"], np.int64)
+    t0 = time.time()
+    for k in range(preset["max_rounds"]):
+        state, m = round_fn(state)
+        ev = int(m.num_events)
+        events_per_round.append(ev)
+        event_counts += np.asarray(m.events)
+        if k % preset["eval_every"] == 0 or k == preset["max_rounds"] - 1:
+            loss, acc = eval_fn(state, test["x"], test["y"])
+            acc_trace.append((k, float(acc)))
+            loss_trace.append((k, float(loss)))
+        load_trace.append(float(np.mean(np.asarray(m.load))))
+
+    trace = {
+        "dataset": dataset, "algorithm": algorithm, "rate": rate,
+        "preset": preset_name, "seed": seed,
+        "target_accuracy": target,
+        "events_per_round": events_per_round,
+        "accuracy": acc_trace,
+        "loss": loss_trace,
+        "mean_load": load_trace,
+        "client_event_counts": event_counts.tolist(),
+        "rounds": preset["max_rounds"],
+        "n_clients": preset["n_clients"],
+        "wall_s": time.time() - t0,
+    }
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    return trace
+
+
+def events_to_accuracy(trace: dict, target: float | None = None):
+    """Total participation events until the target accuracy is first
+    reached (the paper's Tab. 1 metric).  None if never reached."""
+    target = target if target is not None else trace["target_accuracy"]
+    acc = dict(trace["accuracy"])
+    cum = np.cumsum(trace["events_per_round"])
+    reached = [k for k, a in trace["accuracy"] if a >= target]
+    if not reached:
+        return None
+    k = min(reached)
+    return int(cum[k])
+
+
+def realized_rate(trace: dict) -> float:
+    """Average per-client participation rate (paper Tab. 2 metric)."""
+    counts = np.asarray(trace["client_event_counts"], float)
+    return float(np.mean(counts / trace["rounds"]))
+
+
+def accuracy_variance(trace: dict, tail_frac: float = 0.5) -> float:
+    """Round-to-round variance of validation accuracy over the tail of
+    training (Fig. 1's qualitative claim, quantified)."""
+    accs = np.asarray([a for _, a in trace["accuracy"]])
+    tail = accs[int(len(accs) * (1 - tail_frac)):]
+    return float(np.var(np.diff(tail))) if len(tail) > 2 else float("nan")

@@ -1,0 +1,36 @@
+"""Paper Fig. 1: validation-accuracy-per-round curves and the variance
+claim — FedBack's deterministic selection yields much lower round-to-
+round variance of the server model than random sampling at low L̄."""
+from __future__ import annotations
+
+from .common import ALGORITHMS, PRESETS, accuracy_variance, run_sweep
+
+
+def run(dataset: str = "mnist", preset: str = "quick", rates=None,
+        algorithms=ALGORITHMS):
+    rates = rates or PRESETS[preset]["rates"]
+    rows = []
+    for rate in rates:
+        for alg in algorithms:
+            trace = run_sweep(dataset, alg, rate, preset_name=preset)
+            rows.append({
+                "dataset": dataset, "algorithm": alg, "rate": rate,
+                "tail_step_variance": accuracy_variance(trace),
+                "curve": trace["accuracy"],
+            })
+    return rows
+
+
+def emit(rows, print_fn=print):
+    print_fn("fig1,dataset,algorithm,rate,tail_step_variance,final_acc")
+    for r in rows:
+        print_fn(f"fig1,{r['dataset']},{r['algorithm']},{r['rate']},"
+                 f"{r['tail_step_variance']:.3e},{r['curve'][-1][1]:.4f}")
+
+
+def emit_curves(rows, print_fn=print):
+    print_fn("fig1_curve,dataset,algorithm,rate,round,accuracy")
+    for r in rows:
+        for k, a in r["curve"]:
+            print_fn(f"fig1_curve,{r['dataset']},{r['algorithm']},"
+                     f"{r['rate']},{k},{a:.4f}")

@@ -1,0 +1,79 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs. jnp reference.
+
+On CPU the interpret path measures *correct execution* of the exact TPU
+program (not TPU speed); the derived column reports the achieved
+bandwidth of the jnp reference as the apples-to-apples CPU number and
+the analytic TPU-roofline time for the kernel's traffic.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def run(print_fn=print):
+    rng = np.random.default_rng(0)
+    print_fn("name,us_per_call,derived")
+
+    # trigger norms: 100 clients × 159k params (paper MNIST scale)
+    n, d = 100, 159_010
+    z = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    us_ref = _time(jax.jit(ops.trigger_sq_norms_ref), z, w)
+    bytes_moved = (n * d + d) * 4
+    tpu_us = bytes_moved / HBM_BW * 1e6
+    print_fn(f"trigger_norms_ref_jnp,{us_ref:.1f},"
+             f"tpu_roofline_us={tpu_us:.1f}")
+
+    # admm fused update
+    th = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    la = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    us_ref = _time(jax.jit(lambda a, b, c: ops.admm_update_ref(a, b, c)),
+                   th, la, w)
+    bytes_moved = n * d * 4 * 5  # 2 reads + 3 writes (ω cached)
+    print_fn(f"admm_update_ref_jnp,{us_ref:.1f},"
+             f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+
+    # flash attention (single head-block workload)
+    b, h, kvh, s, hd = 1, 8, 2, 1024, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, kvh, s, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, kvh, s, hd)), jnp.bfloat16)
+    us_ref = _time(jax.jit(
+        lambda q, k, v: ops.flash_attention_ref(q, k, v)), q, k, v)
+    flops = 2 * 2 * b * h * s * s * hd  # qk + pv
+    tpu_us = flops / 197e12 * 1e6
+    print_fn(f"flash_attention_ref_jnp,{us_ref:.1f},"
+             f"tpu_compute_roofline_us={tpu_us:.2f}")
+
+    # ssd inter-chunk scan
+    bb, c, hh, p, nn = 4, 64, 80, 64, 128
+    states = jnp.asarray(rng.normal(size=(bb, c, hh, p, nn)), jnp.float32)
+    decays = jnp.asarray(rng.uniform(0.5, 0.99, (bb, c, hh)), jnp.float32)
+    us_ref = _time(jax.jit(lambda s_, d_: ops.ssd_scan_ref(s_, d_)[0]),
+                   states, decays)
+    bytes_moved = states.size * 4 * 2
+    print_fn(f"ssd_scan_ref_jnp,{us_ref:.1f},"
+             f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+
+    # interpret-mode kernels (correctness-path timing, CPU-only number)
+    us_k = _time(lambda: ops.trigger_sq_norms(z[:8, :4096], w[:4096],
+                                              interpret=True))
+    print_fn(f"trigger_norms_pallas_interpret_small,{us_k:.1f},"
+             f"interpret_mode=True")

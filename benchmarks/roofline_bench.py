@@ -1,0 +1,37 @@
+"""Roofline summary benchmark: reads the dry-run artifacts under
+experiments/dryrun/ and emits the §Roofline table as CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(dryrun_dir: str = "experiments/dryrun", print_fn=print):
+    print_fn("roofline,arch,shape,mesh,sharding,status,compute_ms,"
+             "memory_ms,collective_ms,dominant,useful_flops_ratio,"
+             "analytic_hbm_GiB,fits_16GiB,compile_s")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "skipped":
+            print_fn(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                     f"{r.get('sharding_mode','fsdp')},skipped({r['reason'][:40]})"
+                     ",,,,,,,")
+            continue
+        if r.get("status") != "ok":
+            print_fn(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                     f"{r.get('sharding_mode','fsdp')},error,,,,,,,")
+            continue
+        t = r["roofline"]
+        rows.append(r)
+        print_fn(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r.get('sharding_mode','fsdp')},ok,"
+            f"{t['compute_s']*1e3:.2f},{t['memory_s']*1e3:.2f},"
+            f"{t['collective_s']*1e3:.2f},{t['dominant']},"
+            f"{(r.get('useful_flops_ratio') or 0):.3f},"
+            f"{r.get('analytic_hbm_bytes', 0)/2**30:.2f},"
+            f"{r.get('fits_hbm_16GiB','')},{r.get('compile_s','')}")
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Table 2: realized average participation rate vs. target L̄ —
+the controller-tracking claim (Thm. 2): sub-1% error on long runs."""
+from __future__ import annotations
+
+from .common import PRESETS, realized_rate, run_sweep
+
+
+def run(dataset: str = "mnist", preset: str = "quick", rates=None):
+    rates = rates or PRESETS[preset]["rates"]
+    rows = []
+    for rate in rates:
+        trace = run_sweep(dataset, "fedback", rate, preset_name=preset)
+        rows.append({
+            "dataset": dataset, "rate": rate,
+            "realized": realized_rate(trace),
+            "abs_error": abs(realized_rate(trace) - rate),
+        })
+    return rows
+
+
+def emit(rows, print_fn=print):
+    print_fn("table2,dataset,target_rate,realized_rate,abs_error")
+    for r in rows:
+        print_fn(f"table2,{r['dataset']},{r['rate']},{r['realized']:.4f},"
+                 f"{r['abs_error']:.4f}")

@@ -1,0 +1,103 @@
+"""Cross-pod FedBack on a small LM — the distributed engine EXECUTING
+(not just lowering) on 8 host devices: mesh (pod=2, data=2, model=2).
+
+Each pod is one silo training a reduced granite-family decoder on its
+own (skewed) synthetic token distribution; the ADMM consensus is a real
+collective over the pod axis and the integral controller gates pod
+participation round by round.
+
+    PYTHONPATH=src python examples/fedback_transformer.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.controller import ControllerConfig  # noqa: E402
+from repro.core.crosspod import (  # noqa: E402
+    CrossPodConfig,
+    init_cross_pod_state,
+    make_cross_pod_round,
+)
+from repro.models.api import build_model  # noqa: E402
+from repro.sharding.actshard import activation_sharding  # noqa: E402
+from repro.sharding.specs import param_specs, pod_stacked_specs  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+
+def synthetic_tokens(rng, pods, steps, batch, seq, vocab, skew):
+    """Per-pod token streams with different unigram skews (non-iid)."""
+    out = []
+    for i in range(pods):
+        logits = skew * rng.standard_normal(vocab)
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        out.append(rng.choice(vocab, size=(steps, batch, seq + 1), p=p))
+    toks = np.stack(out)  # (pods, steps, batch, seq+1)
+    return {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+            "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+
+
+def main():
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:8]).reshape(2, 2, 2),
+        ("pod", "data", "model"))
+    cfg = get_config("granite-3-2b").reduced(
+        num_layers=2, d_model=128, vocab_size=512, remat=False)
+    model = build_model(cfg)
+
+    cp = CrossPodConfig(
+        n_pods=2, rho=1e-3, lr=5e-3, local_steps=2,
+        controller=ControllerConfig(K=0.05, alpha=0.9, target_rate=0.5))
+
+    def sharded_loss(params, batch):
+        with activation_sharding(mesh, "data"):
+            return model.loss(params, batch)
+
+    round_fn = make_cross_pod_round(cp, sharded_loss)
+    params0 = model.init(jax.random.PRNGKey(0))
+    state = init_cross_pod_state(cp, params0)
+
+    pspec = param_specs(jax.eval_shape(lambda: params0), mesh, mode="fsdp")
+    pod_pspec = pod_stacked_specs(pspec)
+    named = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    state_sh = type(state)(
+        theta=named(pod_pspec), lam=named(pod_pspec),
+        z_prev=named(pod_pspec),
+        ctrl=jax.tree.map(lambda _: NamedSharding(mesh, P()), state.ctrl),
+        rng=NamedSharding(mesh, P()), round=NamedSharding(mesh, P()))
+    batch_sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P("pod", None, "data", None)),
+        {"tokens": 0, "labels": 0})
+
+    step = jax.jit(round_fn, in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, None))
+
+    rng = np.random.default_rng(0)
+    state = jax.device_put(state, state_sh)
+    print(f"{'round':>5} {'events':>7} {'dist(pod0,pod1)':>22} "
+          f"{'delta':>16} {'loss':>8}")
+    for k in range(24):
+        batch = jax.device_put(
+            synthetic_tokens(rng, 2, cp.local_steps, 8, 64,
+                             cfg.vocab_size, skew=1.5), batch_sh)
+        state, m = step(state, batch)
+        d = np.asarray(m.distances)
+        dl = np.asarray(m.delta)
+        print(f"{k:5d} {np.asarray(m.events).astype(int).tolist()!s:>7} "
+              f"[{d[0]:8.3f} {d[1]:8.3f}] [{dl[0]:6.3f} {dl[1]:6.3f}] "
+              f"{float(m.train_loss):8.4f}")
+    ev = np.asarray(jax.device_get(state.ctrl.event_count))
+    print(f"\nper-pod participation over 24 rounds: {ev.tolist()} "
+          f"(target rate {cp.controller.target_rate})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Serve a small LM with batched requests: prefill + decode loop.
+
+Builds a ~45M-parameter granite-family decoder, prefts a batch of
+prompts, then decodes greedily — exercising the same
+prefill/decode_step paths the 32k dry-runs lower at production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 8 --prompt-len 64 \\
+        --new-tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model, param_count
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(
+        num_layers=4, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=8192, kv_block=64)
+    model = build_model(cfg)
+    print(f"model: {cfg.name} ({param_count(cfg)/1e6:.1f}M params)")
+
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size,
+                     (args.batch, args.prompt_len)), jnp.int32)
+    max_seq = args.prompt_len + args.new_tokens
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts})
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    n_tok = args.batch * (args.new_tokens - 1)
+    print(f"prefill: {args.batch}×{args.prompt_len} tokens "
+          f"in {t_prefill*1e3:.0f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    print(f"decode:  {n_tok} tokens in {t_decode*1e3:.0f} ms "
+          f"({n_tok/max(t_decode,1e-9):.0f} tok/s)")
+    print(f"sample continuation (request 0): {out[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Pytree checkpointing (npz-based, no external deps).
+
+Stores arbitrary pytrees (FLState included: server ω, stacked client
+θ/λ/z_prev, controller state, PRNG key) with structure round-tripping
+via flattened key paths.  Atomic write (tmp + rename); ``step``-suffixed
+files with ``latest_checkpoint`` discovery.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _part(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return f"d:{p.key}"
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"s:{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"a:{p.name}"
+    raise TypeError(f"unsupported key path entry {p!r}")
+
+
+def save_checkpoint(directory: str, step: int, tree, *, prefix="ckpt") -> str:
+    """Serialize `tree` to `<directory>/<prefix>_<step>.npz` atomically."""
+    os.makedirs(directory, exist_ok=True)
+    tree = jax.device_get(tree)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(directory, f"{prefix}_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __treedef__=np.frombuffer(
+                json.dumps(str(treedef)).encode(), dtype=np.uint8), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (a template pytree)."""
+    with np.load(path) as zf:
+        flat = {k: zf[k] for k in zf.files if k != "__treedef__"}
+    leaves_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for keypath, leaf in leaves_like:
+        key = _SEP.join(_part(p) for p in keypath)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def latest_checkpoint(directory: str, *, prefix="ckpt") -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    pat = re.compile(rf"{re.escape(prefix)}_(\d+)\.npz$")
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = pat.match(name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, name), int(m.group(1))
+    return best

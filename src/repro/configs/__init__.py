@@ -1,0 +1,62 @@
+"""Architecture + workload-shape registry.
+
+Every assigned architecture is a module ``<id>.py`` exporting CONFIG
+(exact public-literature spec, source cited) — select with
+``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.api import ModelConfig
+
+ARCHITECTURES = (
+    "deepseek_67b",
+    "paligemma_3b",
+    "mamba2_2_7b",
+    "zamba2_2_7b",
+    "qwen3_moe_235b_a22b",
+    "granite_3_2b",
+    "moonshot_v1_16b_a3b",
+    "mixtral_8x7b",
+    "phi3_medium_14b",
+    "hubert_xlarge",
+)
+
+# canonical ids as assigned (dashes) → module names (underscores)
+_ALIASES = {a.replace("_", "-"): a for a in ARCHITECTURES}
+_ALIASES["mamba2-2.7b"] = "mamba2_2_7b"
+_ALIASES["zamba2-2.7b"] = "zamba2_2_7b"
+
+# workload shapes: (mode, seq_len, global_batch)
+INPUT_SHAPES = {
+    "train_4k": ("train", 4_096, 256),
+    "prefill_32k": ("prefill", 32_768, 32),
+    "decode_32k": ("decode", 32_768, 128),
+    "long_500k": ("decode", 524_288, 1),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = _ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCHITECTURES and mod_name not in (
+            "paper_mnist", "paper_cifar"):
+        raise KeyError(f"unknown architecture {arch!r}; "
+                       f"available: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHITECTURES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    mode, seq, batch = INPUT_SHAPES[shape]
+    if mode == "decode" and not cfg.supports_decode:
+        return False, "encoder-only architecture: no autoregressive decode"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention architecture without sliding-window "
+                       "variant: long_500k requires sub-quadratic attention")
+    return True, ""

@@ -1,0 +1,19 @@
+"""FedBack core — the paper's contribution as composable JAX modules."""
+from .controller import (  # noqa: F401
+    ControllerConfig,
+    ControllerState,
+    controller_step,
+    delta_bounds,
+    init_controller,
+    realized_rate,
+    tracking_error_bounds,
+)
+from .trigger import trigger_distances, trigger_events, evaluate_trigger  # noqa: F401
+from .fedback import (  # noqa: F401
+    FLConfig,
+    init_state,
+    make_eval_fn,
+    make_round_fn,
+    run_rounds,
+)
+from .state import FLState, RoundMetrics  # noqa: F401

@@ -1,0 +1,112 @@
+"""Client-selection strategies.
+
+The paper contrasts two families:
+
+* **fedback** — deterministic event-triggered selection driven by the
+  integral feedback controller (Alg. 1).  The server fires client i when
+  ‖ω^k − z_i^prev‖ ≥ δ_i^k and adapts δ_i to hit the target rate L̄_i.
+* **random** — the classical scheme used by FedAvg/FedProx/FedADMM: an
+  ⌊L̄·N⌋-subset sampled uniformly at random each round.
+
+Both produce an (N,) boolean event vector per round; they are
+interchangeable inside the round engine, which is exactly how the paper
+frames its baselines ("FedADMM is FedBack with random selection").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .controller import ControllerConfig, ControllerState, controller_step
+from .trigger import trigger_distances, evaluate_trigger
+
+
+@dataclasses.dataclass(frozen=True)
+class FedBackSelection:
+    controller: ControllerConfig
+    metric: str = "l2"
+
+    def __call__(self, rng, state, distances):
+        events = evaluate_trigger(distances, state.ctrl.delta)
+        ctrl = controller_step(state.ctrl, events, self.controller)
+        return events, ctrl
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomSelection:
+    """Uniform L̄-fraction sampling without replacement (paper baselines)."""
+
+    rate: float
+
+    def __call__(self, rng, state, distances):
+        n = state.ctrl.delta.shape[0]
+        k = max(int(round(self.rate * n)), 1)
+        perm = jax.random.permutation(rng, n)
+        events = jnp.zeros((n,), bool).at[perm[:k]].set(True)
+        # Controller state still tracks realized events for metrics parity.
+        ctrl = controller_step(state.ctrl, events,
+                               ControllerConfig(K=0.0, target_rate=self.rate))
+        return events, ctrl
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliSelection:
+    """I.i.d. Bernoulli(L̄) participation — unreliable-client ablation."""
+
+    rate: float
+
+    def __call__(self, rng, state, distances):
+        n = state.ctrl.delta.shape[0]
+        events = jax.random.bernoulli(rng, self.rate, (n,))
+        ctrl = controller_step(state.ctrl, events,
+                               ControllerConfig(K=0.0, target_rate=self.rate))
+        return events, ctrl
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSelection:
+    """δ ≡ 0 — vanilla consensus ADMM (every client, every round)."""
+
+    def __call__(self, rng, state, distances):
+        n = state.ctrl.delta.shape[0]
+        events = jnp.ones((n,), bool)
+        ctrl = controller_step(state.ctrl, events,
+                               ControllerConfig(K=0.0, target_rate=1.0))
+        return events, ctrl
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinSelection:
+    """Deterministic cyclic ⌊L̄N⌋-subset — a feedback-free deterministic
+    control, used in ablations to isolate the value of the *adaptive*
+    trigger over mere determinism."""
+
+    rate: float
+
+    def __call__(self, rng, state, distances):
+        n = state.ctrl.delta.shape[0]
+        k = max(int(round(self.rate * n)), 1)
+        start = (state.round * k) % n
+        idx = (start + jnp.arange(k)) % n
+        events = jnp.zeros((n,), bool).at[idx].set(True)
+        ctrl = controller_step(state.ctrl, events,
+                               ControllerConfig(K=0.0, target_rate=self.rate))
+        return events, ctrl
+
+
+def make_selection(name: str, *, rate: float, controller: ControllerConfig,
+                   metric: str = "l2"):
+    name = name.lower()
+    if name == "fedback":
+        return FedBackSelection(controller=controller, metric=metric)
+    if name == "random":
+        return RandomSelection(rate=rate)
+    if name == "bernoulli":
+        return BernoulliSelection(rate=rate)
+    if name == "full":
+        return FullSelection()
+    if name == "round_robin":
+        return RoundRobinSelection(rate=rate)
+    raise ValueError(f"unknown selection strategy: {name}")

@@ -1,0 +1,33 @@
+"""Federated state containers.
+
+All client-side quantities are *stacked* pytrees with a leading client
+axis of size N — one jittable program advances every client at once
+(vmap over the axis locally, or shard it over the ``data`` mesh axis for
+the distributed simulation).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from .controller import ControllerState
+
+
+class FLState(NamedTuple):
+    theta: Any  # stacked pytree (N, ...) — local primal variables θ_i
+    lam: Any  # stacked pytree (N, ...) — dual variables λ_i (zeros for FedAvg/Prox)
+    z_prev: Any  # stacked pytree (N, ...) — server copies z_i^prev = θ_i + λ_i
+    omega: Any  # pytree — server parameters ω
+    ctrl: ControllerState  # participation controller (inert for random selection)
+    rng: jax.Array  # PRNG key advanced once per round
+    round: jax.Array  # () int32
+
+
+class RoundMetrics(NamedTuple):
+    events: jax.Array  # (N,) bool — S_i^k
+    num_events: jax.Array  # () int32
+    distances: jax.Array  # (N,) fp32 — ‖ω − z_i^prev‖
+    delta: jax.Array  # (N,) fp32 — thresholds after the round
+    load: jax.Array  # (N,) fp32 — low-pass participation estimates
+    train_loss: jax.Array  # () fp32 — mean local loss among participants

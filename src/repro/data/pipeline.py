@@ -1,0 +1,35 @@
+"""Federated data pipeline glue."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .partition import partition_dirichlet, partition_label_shard
+from .synthetic import Dataset
+
+
+def federated_arrays(ds: Dataset, *, n_clients: int, scheme: str = "label_shard",
+                     classes_per_client: int = 2, beta: float = 0.5,
+                     seed: int = 0):
+    """Partition a Dataset into device arrays for the round engine.
+
+    Returns (data, test) where data = {"x": (N, n_i, ...), "y": (N, n_i)}.
+    """
+    if scheme == "label_shard":
+        xs, ys = partition_label_shard(
+            ds.x_train, ds.y_train, n_clients=n_clients,
+            classes_per_client=classes_per_client, seed=seed)
+    elif scheme == "dirichlet":
+        xs, ys = partition_dirichlet(
+            ds.x_train, ds.y_train, n_clients=n_clients, beta=beta, seed=seed)
+    elif scheme == "iid":
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(len(ds.y_train))
+        n_i = len(idx) // n_clients
+        idx = idx[: n_i * n_clients].reshape(n_clients, n_i)
+        xs, ys = ds.x_train[idx], ds.y_train[idx]
+    else:
+        raise ValueError(f"unknown scheme {scheme}")
+    data = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+    test = {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}
+    return data, test

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+<name>.py           pl.pallas_call + explicit BlockSpec VMEM tiling
+ops.py              jit'd public wrappers (auto interpret on non-TPU)
+ref.py              pure-jnp oracles (tests assert allclose)
+"""
+from . import ops  # noqa: F401

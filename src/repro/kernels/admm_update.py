@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused ADMM client update (paper Eq. 2.3).
+
+The dual update, the upload variable and the prox center are three
+elementwise expressions over the same (N, D) operands:
+
+    λ⁺ = λ + θ − ω ;   z = θ + λ⁺ ;   c = ω − λ⁺
+
+Unfused, XLA emits three HBM passes over N·D elements; the kernel does
+one read of (θ, λ, ω-tile) and one write per output — the round-level
+client update becomes strictly bandwidth-bound at its floor (5 streams
+instead of 9).  Blocks (8, 1024): VPU-aligned, fp32 accumulate-free
+(pure elementwise), dtype-preserving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(th_ref, la_ref, w_ref, lam_out, z_out, c_out):
+    th = th_ref[...]
+    la = la_ref[...]
+    w = w_ref[...][None, :]
+    lam_new = la + th - w
+    lam_out[...] = lam_new
+    z_out[...] = th + lam_new
+    c_out[...] = w - lam_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret"))
+def admm_update(theta, lam, omega, *, block_n: int = 8, block_d: int = 1024,
+                interpret: bool = True):
+    """theta/lam: (N, D); omega: (D,) → (λ⁺, z, center), each (N, D)."""
+    n, d = theta.shape
+    n_pad = -n % block_n
+    d_pad = -d % block_d
+    if n_pad or d_pad:
+        pad2 = ((0, n_pad), (0, d_pad))
+        theta = jnp.pad(theta, pad2)
+        lam = jnp.pad(lam, pad2)
+    if d_pad:
+        omega = jnp.pad(omega, (0, d_pad))
+    np_, dp = theta.shape
+
+    shape = jax.ShapeDtypeStruct((np_, dp), theta.dtype)
+    spec2 = pl.BlockSpec((block_n, block_d), lambda i, j: (i, j))
+    lam_new, z, c = pl.pallas_call(
+        _kernel,
+        grid=(np_ // block_n, dp // block_d),
+        in_specs=[spec2, spec2,
+                  pl.BlockSpec((block_d,), lambda i, j: (j,))],
+        out_specs=(spec2, spec2, spec2),
+        out_shape=(shape, shape, shape),
+        interpret=interpret,
+    )(theta, lam, omega)
+    crop = lambda x: x[:n, :d]
+    return crop(lam_new), crop(z), crop(c)

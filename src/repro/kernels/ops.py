@@ -1,0 +1,73 @@
+"""Public kernel entry points.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp
+reference.  On this CPU container the kernels execute in interpret mode
+(the kernel *body* runs, validating the exact TPU program); on a real
+TPU backend set ``interpret=False`` (the default flips automatically).
+
+``trigger_sq_norms_pytree`` is the integration point used by the
+FedBack server: it flattens stacked client pytrees into the (N, D)
+layout the kernel wants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .admm_update import admm_update as _admm_update
+from .flash_attention import flash_attention as _flash_attention
+from .ssd_scan import ssd_scan as _ssd_scan
+from .trigger_norms import trigger_sq_norms as _trigger_sq_norms
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def trigger_sq_norms(z_prev, omega, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _trigger_sq_norms(z_prev, omega, interpret=interpret)
+
+
+def admm_update(theta, lam, omega, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _admm_update(theta, lam, omega, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+def ssd_scan(states, decays, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd_scan(states, decays, interpret=interpret)
+
+
+def trigger_sq_norms_pytree(z_prev_stacked, omega, *,
+                            interpret: bool | None = None):
+    """Stacked-pytree front-end for the FedBack server trigger.
+
+    z_prev_stacked: pytree with leading client axis N; omega: matching
+    pytree.  Returns (N,) fp32 squared distances.
+    """
+    n = jax.tree.leaves(z_prev_stacked)[0].shape[0]
+    z2d = jnp.concatenate(
+        [x.reshape(n, -1).astype(jnp.float32)
+         for x in jax.tree.leaves(z_prev_stacked)], axis=1)
+    w1d = jnp.concatenate(
+        [x.reshape(-1).astype(jnp.float32)
+         for x in jax.tree.leaves(omega)])
+    return trigger_sq_norms(z2d, w1d, interpret=interpret)
+
+
+# re-export oracles for convenience
+trigger_sq_norms_ref = ref.trigger_sq_norms_ref
+admm_update_ref = ref.admm_update_ref
+flash_attention_ref = ref.flash_attention_ref
+ssd_scan_ref = ref.ssd_scan_ref

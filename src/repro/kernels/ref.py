@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth for the interpret-mode allclose sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trigger_sq_norms_ref(z_prev, omega):
+    """Per-client squared trigger distances ‖z_i − ω‖² (fp32).
+
+    z_prev: (N, D); omega: (D,) → (N,) fp32.
+    """
+    diff = z_prev.astype(jnp.float32) - omega.astype(jnp.float32)[None]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def admm_update_ref(theta, lam, omega):
+    """Fused ADMM client update (Eq. 2.3 dual + z):
+
+        λ⁺ = λ + θ − ω ;  z = θ + λ⁺ ;  c = ω − λ⁺  (prox center)
+    theta/lam: (N, D); omega: (D,) → (λ⁺, z, c) each (N, D).
+    """
+    lam_new = lam + theta - omega[None]
+    z = theta + lam_new
+    center = omega[None] - lam_new
+    return lam_new, z, center
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Masked softmax attention oracle.
+
+    q: (B, H, S, hd); k, v: (B, KvH, S, hd) (GQA: H % KvH == 0).
+    """
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, s, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgqh,bkth->bkgqt", qg,
+                        k.astype(jnp.float32)) / hd ** 0.5
+    qa = jnp.arange(s)[:, None]
+    ka = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= ka <= qa
+    if window:
+        ok &= ka > qa - window
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,bkth->bkgqh", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(states, decays):
+    """Inter-chunk SSD state scan oracle.
+
+    states: (B, C, H, P, N) — per-chunk compressed inputs;
+    decays: (B, C, H)       — per-chunk total decay.
+    Returns h_prev (B, C, H, P, N): the carried state *entering* each
+    chunk (exclusive scan), plus the final state (B, H, P, N).
+    """
+    b, c, h, p, n = states.shape
+
+    def body(h_prev, xs):
+        st, dec = xs
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, h, p, n), states.dtype)
+    h_last, h_prevs = jax.lax.scan(
+        body, h0, (states.swapaxes(0, 1), decays.swapaxes(0, 1)))
+    return h_prevs.swapaxes(0, 1), h_last

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: Mamba-2 inter-chunk state scan (SSD).
+
+After the intra-chunk SSD contraction, each chunk c of each (batch,
+head) owns a compressed state increment S_c ∈ R^{P×N} and a scalar
+decay a_c; the recurrence
+
+    H_c = a_c · H_{c−1} + S_{c−1},     H_0 = 0
+
+must run sequentially over chunks.  XLA lowers the natural lax.scan to
+per-step HBM round-trips of the (P, N) carry; the kernel instead walks
+the chunk dimension as the innermost sequential grid with the carry in
+fp32 VMEM scratch — one HBM read per S_c, one write per H_c, carry
+never leaves VMEM.  (P, N) = (64, 128) tiles are exactly one fp32 VREG
+page set, matching the (8, 128) layout.
+
+Returns the *entering* state per chunk (exclusive scan) — what the
+intra-chunk pass consumes — plus the final carry for decode handoff.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, a_ref, h_ref, last_ref, carry_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    h_ref[0, 0, ...] = carry_ref[...].astype(h_ref.dtype)
+    carry_ref[...] = (carry_ref[...] * a_ref[0, 0]
+                      + s_ref[0, 0].astype(jnp.float32))
+
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _():
+        last_ref[0, ...] = carry_ref[...].astype(last_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(states, decays, *, interpret: bool = True):
+    """states: (B, C, H, P, N); decays: (B, C, H) →
+    (h_prev (B, C, H, P, N), h_last (B, H, P, N))."""
+    b, c, h, p, n = states.shape
+    bh = b * h
+    # (BH, C, P, N) layout: chunk dim innermost-sequential per (b, h)
+    sr = states.transpose(0, 2, 1, 3, 4).reshape(bh, c, p, n)
+    ar = decays.transpose(0, 2, 1).reshape(bh, c)
+
+    h_prev, h_last = pl.pallas_call(
+        _kernel,
+        grid=(bh, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda m, j: (m, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda m, j: (m, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, p, n), lambda m, j: (m, j, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda m, j: (m, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bh, c, p, n), states.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), states.dtype),
+        ),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(sr, ar)
+    h_prev = h_prev.reshape(b, h, c, p, n).transpose(0, 2, 1, 3, 4)
+    return h_prev, h_last.reshape(b, h, p, n)

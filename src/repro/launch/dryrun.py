@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input-shape × mesh) program on
+placeholder host devices — 256 chips single-pod (16×16) and 512 chips
+multi-pod (2×16×16) — proving the sharding configs are coherent without
+hardware, and extracting the roofline terms (deliverable g) from the
+compiled artifact.
+
+  train_4k     → train_step      (single-pod: FedBack local prox step;
+                                  multi-pod: the full cross-pod FedBack
+                                  round incl. the event-gated consensus)
+  prefill_32k  → prefill
+  decode_32k   → serve_step      (1 token, 32k KV/SSM cache)
+  long_500k    → serve_step      (1 token, 524k context; sub-quadratic
+                                  archs only)
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config, \
+    shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    model_flops_per_device,
+    roofline_terms,
+    summarize,
+)
+from repro.launch.steps import (
+    make_cross_pod_step,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.api import active_param_count, build_model, param_count
+
+
+def _mem_dict(ma) -> dict:
+    if ma is None:
+        return {}
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes")
+    return {f: int(getattr(ma, f, 0)) for f in fields}
+
+
+def analytic_hbm_bytes(cfg, *, step_mode, batch, seq, n_chips,
+                       multi_pod, local_steps):
+    """First-principles per-chip HBM estimate for the TPU target.
+
+    Recorded alongside the measured CPU-backend temp size, which
+    over-counts: XLA-CPU's fusion of the residual-stash update
+    materializes a second fp32 copy of the whole stash (see
+    EXPERIMENTS §Dry-run) that the TPU assignment keeps bf16 in-loop.
+    """
+    p = param_count(cfg)
+    bp = 2 if cfg.dtype == "bfloat16" else 4
+    d_eff = cfg.d_model
+    if step_mode == "train":
+        # params + grads + prox center (bp each) + adam m,v (fp32)
+        state = p * (3 * bp + 8)
+        if multi_pod:
+            state += p * 3 * bp  # θ, λ, z_prev per pod (pod-sharded)
+        # activations are batch-sharded only (not model-sharded): per-chip
+        # slice of the stash is B/(data·pod) sequences
+        stash = cfg.num_layers / max(cfg.remat_group, 1) * \
+            (batch / n_chips * 16) * seq * d_eff * bp
+        transient = 6 * (batch / n_chips * 16) * seq * max(
+            cfg.d_ff or 2 * cfg.d_model, cfg.num_heads * cfg.head_dim or 0,
+            2 * d_eff) * bp
+        return state / n_chips + stash + transient
+    if step_mode == "prefill":
+        acts = 8 * (batch * 16 / n_chips) * seq * d_eff * bp
+        cache = (cfg.num_layers * batch * seq * max(
+            cfg.num_kv_heads * cfg.head_dim, 1) * 2 * bp / n_chips
+            if cfg.family in ("dense", "moe", "vlm") else
+            cfg.num_layers * batch * 2 * cfg.expand * d_eff *
+            cfg.ssm_state * 4 / n_chips)
+        return p * bp / n_chips + acts + cache
+    # decode
+    window = cfg.sliding_window or seq
+    kv_len = min(seq, window) if cfg.sliding_window else seq
+    cache = (cfg.num_layers * batch * kv_len *
+             max(cfg.num_kv_heads * cfg.head_dim, 1) * 2 * bp
+             if cfg.family in ("dense", "moe", "vlm") else
+             cfg.num_layers * batch * cfg.expand * d_eff *
+             cfg.ssm_state * 4)
+    if cfg.family == "hybrid":
+        ng = cfg.num_layers // cfg.attn_every
+        cache += ng * batch * min(seq, cfg.sliding_window or seq) *             cfg.num_kv_heads * cfg.head_dim * 2 * bp
+    return p * bp / n_chips + cache / min(n_chips, max(batch, 1)) +         2 ** 28
+
+
+def build_step(cfg, shape: str, *, multi_pod: bool,
+               mode: str = "fsdp", local_steps: int = 2):
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return None, reason
+    step_mode, seq, batch = INPUT_SHAPES[shape]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = ("pod", "data") if multi_pod else ("data",)
+    if step_mode == "train":
+        if multi_pod:
+            built = make_cross_pod_step(model, mesh, batch=batch, seq=seq,
+                                        mode=mode, local_steps=local_steps)
+        else:
+            built = make_train_step(model, mesh, batch=batch, seq=seq,
+                                    mode=mode, batch_axes=baxes)
+    elif step_mode == "prefill":
+        built = make_prefill_step(model, mesh, batch=batch, seq=seq,
+                                  mode=mode, batch_axes=baxes)
+    else:
+        built = make_decode_step(model, mesh, batch=batch, seq=seq,
+                                 mode=mode, batch_axes=baxes)
+    return (cfg, model, mesh, built, step_mode, seq, batch), ""
+
+
+def _reduced_layers(cfg, n_units: int):
+    """Config with n_units scan iterations (hybrid: units are groups)."""
+    import dataclasses
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, num_layers=n_units * cfg.attn_every)
+    g = max(cfg.remat_group, 1)
+    if cfg.num_layers % g == 0 and g > 1:
+        return dataclasses.replace(cfg, num_layers=n_units * g)
+    return dataclasses.replace(cfg, num_layers=n_units)
+
+
+def _scan_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    g = max(cfg.remat_group, 1)
+    return cfg.num_layers // g if cfg.num_layers % g == 0 else cfg.num_layers
+
+
+def _compile_cost(cfg, shape, *, multi_pod, mode, local_steps):
+    """cost_analysis + collective bytes for one config (no mem record)."""
+    built, _ = build_step(cfg, shape, multi_pod=multi_pod, mode=mode,
+                          local_steps=local_steps)
+    _, model, mesh, (fn, in_sh, out_sh, args), step_mode, seq, batch = built
+    compiled = jax.jit(fn, in_shardings=in_sh,
+                       out_shardings=out_sh).lower(*args).compile()
+    ca = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    from repro.utils.hlo import total_collective_bytes
+    return {
+        "flops": float(ca.get("flops", 0.0) or 0.0),
+        "bytes": float(ca.get("bytes accessed", 0.0) or 0.0),
+        "coll": total_collective_bytes(hlo, world_size=n_chips),
+    }
+
+
+def corrected_cost(cfg, shape, *, multi_pod, mode, local_steps):
+    """XLA's cost analysis counts `while` bodies ONCE — the layer scan
+    (L iterations) is invisible beyond its first trip.  Correct it by
+    lowering 1-unit and 2-unit variants of the same program:
+
+        cost(L) = cost(1 unit) + (units − 1) · (cost(2) − cost(1))
+
+    Inner (kv-block / CE-chunk / microbatch) loops are unrolled at
+    trace time (cfg.unroll_inner), so the per-unit delta is exact for
+    them; only the SSD inter-chunk scan (negligible FLOPs) stays rolled.
+    """
+    import dataclasses
+    cfg_u = dataclasses.replace(cfg, unroll_inner=True, unroll_layers=True)
+    units = _scan_units(cfg_u)
+    c1 = _compile_cost(_reduced_layers(cfg_u, 1), shape, multi_pod=multi_pod,
+                       mode=mode, local_steps=local_steps)
+    c2 = _compile_cost(_reduced_layers(cfg_u, 2), shape, multi_pod=multi_pod,
+                       mode=mode, local_steps=local_steps)
+    return {
+        k: c1[k] + (units - 1) * max(c2[k] - c1[k], 0.0)
+        for k in ("flops", "bytes", "coll")
+    }
+
+
+def dry_run(arch: str, shape: str, *, multi_pod: bool = False,
+            mode: str = "fsdp", local_steps: int = 2,
+            cost_correction: bool = True, cfg=None) -> dict:
+    """Lower + compile one (arch × shape × mesh) program; return the
+    §Dry-run/§Roofline record."""
+    t0 = time.time()
+    cfg = cfg or get_config(arch)
+    built, reason = build_step(cfg, shape, multi_pod=multi_pod, mode=mode,
+                               local_steps=local_steps)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape, "mesh": mesh_name,
+            "sharding_mode": mode}
+    if built is None:
+        return {**base, "status": "skipped", "reason": reason}
+    cfg, model, mesh, (fn, in_sh, out_sh, args), step_mode, seq, batch = built
+
+    lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+        *args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ca = dict(compiled.cost_analysis() or {})
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    if cost_correction:
+        cc = corrected_cost(cfg, shape, multi_pod=multi_pod, mode=mode,
+                            local_steps=local_steps)
+        ca = dict(ca)
+        ca["flops"] = cc["flops"]
+        ca["bytes accessed"] = cc["bytes"]
+        ca["collective_bytes_override"] = cc["coll"]
+    terms = roofline_terms(ca, hlo, world_size=n_chips)
+    if cost_correction:
+        terms["collective_s"] = cc["coll"] / 50e9
+        terms["collective_bytes_per_device"] = cc["coll"]
+        terms["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"),
+            key=lambda k: terms[k]).replace("_s", "")
+        terms["bound_time_s"] = max(terms["compute_s"], terms["memory_s"],
+                                    terms["collective_s"])
+    # NOTE: global_batch already spans the cross-pod local steps
+    # (batch = pods × local_steps × per-step), so no extra multiplier.
+    mf = model_flops_per_device(
+        cfg, mode=step_mode, batch=batch, seq=seq, n_chips=n_chips,
+        active_params=active_param_count(cfg))
+    mem = _mem_dict(ma)
+    per_dev_bytes = sum(mem.get(k, 0) for k in
+                        ("argument_size_in_bytes", "temp_size_in_bytes",
+                         "output_size_in_bytes"))
+    analytic = analytic_hbm_bytes(cfg, step_mode=step_mode, batch=batch,
+                                  seq=seq, n_chips=n_chips,
+                                  multi_pod=multi_pod,
+                                  local_steps=local_steps)
+    record = {
+        **base,
+        "status": "ok",
+        "step": step_mode,
+        "seq": seq,
+        "batch": batch,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "bytes_per_device": per_dev_bytes,
+        "analytic_hbm_bytes": int(analytic),
+        "fits_hbm_16GiB": bool(analytic < 16 * 2 ** 30),
+        "cpu_measured_fits": bool(per_dev_bytes < 16 * 2 ** 30),
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": (mf / terms["hlo_flops_per_device"]
+                               if terms["hlo_flops_per_device"] else None),
+        "roofline": terms,
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(INPUT_SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--sharding", default="fsdp",
+                    choices=["fsdp", "tp", "fsdp_tp"])
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--out", default=None,
+                    help="directory for per-combo JSON records")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip combos whose JSON already exists in --out")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides key=value (repeatable); "
+                         "e.g. --set chunk=32 --set ssd_intra_dtype=bfloat16")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output filenames (perf variants)")
+    args = ap.parse_args()
+
+    import dataclasses as _dc
+
+    def apply_overrides(cfg):
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            cur = getattr(cfg, k)
+            if isinstance(cur, bool):
+                v = v.lower() in ("1", "true", "yes")
+            elif isinstance(cur, int):
+                v = int(v)
+            elif isinstance(cur, float):
+                v = float(v)
+            cfg = _dc.replace(cfg, **{k: v})
+        return cfg
+
+    archs = list(ARCHITECTURES) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                fname = (f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                         f"__{args.sharding}"
+                         f"{('__' + args.tag) if args.tag else ''}.json")
+                if (args.skip_existing and args.out and
+                        os.path.exists(os.path.join(args.out, fname))):
+                    print(f"{tag}: exists, skipping", flush=True)
+                    continue
+                try:
+                    rec = dry_run(arch, shape, multi_pod=mp,
+                                  mode=args.sharding,
+                                  local_steps=args.local_steps,
+                                  cfg=apply_overrides(get_config(arch)))
+                    if args.set:
+                        rec["overrides"] = list(args.set)
+                except Exception:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error",
+                           "error": traceback.format_exc()[-2000:]}
+                if rec["status"] == "ok":
+                    print(summarize(rec), flush=True)
+                    mem = rec["memory_analysis"]
+                    print(f"    memory/device: args="
+                          f"{mem.get('argument_size_in_bytes', 0)/2**30:.2f}"
+                          f"GiB temp="
+                          f"{mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"fits16GiB={rec['fits_hbm_16GiB']} "
+                          f"compile={rec['compile_s']:.1f}s", flush=True)
+                else:
+                    print(f"{tag}: {rec['status']}: "
+                          f"{rec.get('reason', rec.get('error', ''))[:300]}",
+                          flush=True)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fname = (f"{arch}__{shape}__"
+                             f"{'multi' if mp else 'single'}"
+                             f"__{args.sharding}"
+                             f"{('__' + args.tag) if args.tag else ''}.json")
+                    with open(os.path.join(args.out, fname), "w") as f:
+                        json.dump(rec, f, indent=1)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

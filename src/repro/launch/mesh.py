@@ -1,0 +1,40 @@
+"""Production meshes (TPU v5e).
+
+single-pod: (16, 16)      axes ("data", "model")         — 256 chips
+multi-pod:  (2, 16, 16)   axes ("pod", "data", "model")  — 512 chips
+
+Functions, not module constants — importing this module never touches
+jax device state (the dry-run launcher must set XLA_FLAGS before any
+device query).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (launch/dryrun.py does this)")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small host-device mesh for CI (requires the XLA flag set by the
+    test's subprocess/session to ≥ prod(shape) host devices)."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

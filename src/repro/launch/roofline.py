@@ -1,0 +1,77 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Hardware model: TPU v5e —
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``compiled.cost_analysis()`` returns **per-device** (post-SPMD) FLOPs
+and bytes (validated empirically: a (8,64)×(64,128) matmul on a (2,4)
+mesh reports 1/8 of the global FLOPs), so:
+
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = bytes_per_device / HBM_BW
+    collective term = link_bytes_per_device / LINK_BW
+
+with link bytes from the ring-multiplier inventory in utils/hlo.py
+(HLO shapes are per-device too).  MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (inference) per device, ratioed against HLO FLOPs to
+expose remat/dispatch/mask waste.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.utils.hlo import collective_inventory, total_collective_bytes
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link (conservative single-link model)
+
+
+def model_flops_per_device(cfg, *, mode: str, batch: int, seq: int,
+                           n_chips: int, active_params: int,
+                           local_steps: int = 1) -> float:
+    """6·N·D (train: fwd+bwd) / 2·N·D (inference fwd) per device."""
+    if mode == "train":
+        tokens = batch * seq * local_steps
+        factor = 6.0
+    elif mode == "prefill":
+        tokens = batch * seq
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = batch * 1
+        factor = 2.0
+    return factor * active_params * tokens / n_chips
+
+
+def roofline_terms(cost: dict[str, Any], hlo_text: str, *,
+                   world_size: int) -> dict[str, Any]:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
+    coll = total_collective_bytes(hlo_text, world_size=world_size)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_hbm / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dominant = max(terms, key=terms.get)
+    return {
+        **terms,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_hbm,
+        "collective_bytes_per_device": coll,
+        "dominant": dominant.replace("_s", ""),
+        "bound_time_s": max(t_c, t_m, t_x),
+        "collectives": collective_inventory(hlo_text,
+                                            world_size=world_size),
+    }
+
+
+def summarize(record: dict) -> str:
+    r = record
+    t = r["roofline"]
+    mfu = (r.get("model_flops_per_device", 0.0) /
+           max(t["hlo_flops_per_device"], 1.0))
+    return (f"{r['arch']:24s} {r['shape']:12s} mesh={r['mesh']:10s} "
+            f"compute={t['compute_s']*1e3:9.3f}ms "
+            f"memory={t['memory_s']*1e3:9.3f}ms "
+            f"coll={t['collective_s']*1e3:9.3f}ms "
+            f"dom={t['dominant']:10s} useful/hlo={mfu:5.2f}")

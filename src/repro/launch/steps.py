@@ -1,0 +1,205 @@
+"""Distributed step builders shared by the dry-run, the trainer and the
+server.
+
+Every step is the *paper's* computation at the appropriate scope:
+
+* ``make_train_step`` (single-pod) — one client-local FedBack inner
+  iteration (Eq. 2.3): grad of loss + ρ(θ − c) prox pull toward the
+  ADMM center c = ω − λ, then an AdamW update.  ω/λ enter as a
+  param-shaped ``center`` input sharded like the parameters.
+* ``make_cross_pod_step`` (multi-pod) — a full FedBack round with one
+  silo per pod: trigger norms, controller, gated local updates and the
+  event-gated consensus psum over the ``pod`` axis
+  (repro.core.crosspod).
+* ``make_prefill_step`` / ``make_decode_step`` — serving paths with KV
+  or SSM-state caches.
+
+All builders return ``(fn, in_shardings, out_shardings, abstract_args)``
+ready for ``jax.jit(...).lower(*abstract_args).compile()``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.controller import ControllerConfig
+from repro.core.crosspod import (
+    CrossPodConfig,
+    init_cross_pod_state,
+    make_cross_pod_round,
+)
+from repro.models.api import Model, abstract_params, input_specs
+from repro.optim.adam import adam_init, adam_step
+from repro.sharding.actshard import activation_sharding
+from repro.sharding.specs import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+    pod_stacked_specs,
+)
+
+DEFAULT_RHO = 1e-4
+DEFAULT_LR = 3e-4
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+# ----------------------------------------------------------------------
+# train
+# ----------------------------------------------------------------------
+
+
+def make_train_step(model: Model, mesh, *, batch: int, seq: int,
+                    mode: str = "fsdp", rho: float = DEFAULT_RHO,
+                    lr: float = DEFAULT_LR, batch_axes=("data",),
+                    grad_accum: int = 1):
+    cfg = model.config
+    p_abs = abstract_params(model)
+    opt_abs = jax.eval_shape(adam_init, p_abs)
+    b_abs = input_specs(cfg, mode="train", batch=batch, seq=seq)
+
+    pspec = param_specs(p_abs, mesh, mode=mode)
+    # Adam state mirrors the param tree twice plus a step scalar:
+    opt_spec = type(opt_abs)(mu=pspec, nu=pspec, step=P())
+    bspec = batch_specs(b_abs, batch_axes=tuple(batch_axes)
+                        if len(batch_axes) > 1 else batch_axes[0])
+
+    baxes_spec = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    def train_step(params, opt, center, batch):
+        # gradient accumulation: an *unrolled* microbatch loop (counted
+        # correctly by cost analysis, buffers reused by the allocator);
+        # shrinks activation temps by the accumulation factor.
+        with activation_sharding(mesh, baxes_spec):
+            if grad_accum > 1:
+                loss = jnp.zeros((), jnp.float32)
+                g = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, x.dtype), params)
+                for i in range(grad_accum):
+                    micro = jax.tree.map(
+                        lambda x: x.reshape((grad_accum,
+                                             x.shape[0] // grad_accum)
+                                            + x.shape[1:])[i], batch)
+                    li, gi = jax.value_and_grad(model.loss)(params, micro)
+                    loss = loss + li / grad_accum
+                    g = jax.tree.map(
+                        lambda a, b_: a + b_ / grad_accum, g, gi)
+            else:
+                loss, g = jax.value_and_grad(model.loss)(params, batch)
+        g = jax.tree.map(lambda gl, pl_, c: gl + rho * (
+            pl_.astype(jnp.float32) - c.astype(jnp.float32)).astype(gl.dtype),
+            g, params, center)
+        params, opt = adam_step(params, g, opt, lr)
+        return params, opt, loss
+
+    in_sh = (_named(mesh, pspec), _named(mesh, opt_spec),
+             _named(mesh, pspec), _named(mesh, bspec))
+    out_sh = (_named(mesh, pspec), _named(mesh, opt_spec), None)
+    args = (p_abs, opt_abs, p_abs, b_abs)
+    return train_step, in_sh, out_sh, args
+
+
+def make_cross_pod_step(model: Model, mesh, *, batch: int, seq: int,
+                        mode: str = "fsdp", local_steps: int = 2,
+                        rho: float = DEFAULT_RHO, lr: float = DEFAULT_LR,
+                        target_rate: float = 0.5):
+    """Full FedBack round across pods (the multi-pod dry-run program)."""
+    cfg = model.config
+    n_pods = mesh.shape["pod"]
+    cp = CrossPodConfig(
+        n_pods=n_pods, rho=rho, lr=lr, local_steps=local_steps,
+        controller=ControllerConfig(K=0.5, alpha=0.9,
+                                    target_rate=target_rate))
+
+    def sharded_loss(params, batch):
+        with activation_sharding(mesh, "data"):
+            return model.loss(params, batch)
+
+    round_fn = make_cross_pod_round(cp, sharded_loss)
+
+    p_abs = abstract_params(model)
+    state_abs = _abstract(jax.eval_shape(
+        lambda p: init_cross_pod_state(cp, p), p_abs))
+    # batch: (pods, local_steps, per-step-batch, ...)
+    per_step = batch // (n_pods * local_steps)
+    assert per_step >= 1, (batch, n_pods, local_steps)
+    flat = input_specs(cfg, mode="train", batch=per_step, seq=seq)
+    b_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            (n_pods, local_steps) + l.shape, l.dtype), flat)
+
+    pspec = param_specs(p_abs, mesh, mode=mode)
+    pod_pspec = pod_stacked_specs(pspec)
+    ctrl_spec = jax.tree.map(lambda _: P(), state_abs.ctrl)
+    state_spec = type(state_abs)(
+        theta=pod_pspec, lam=pod_pspec, z_prev=pod_pspec,
+        ctrl=ctrl_spec, rng=P(), round=P())
+    bspec = jax.tree.map(
+        lambda l: P("pod", None, "data", *([None] * (len(l.shape) - 3))),
+        b_abs)
+
+    metrics_spec = None  # small per-pod vectors: let XLA place them
+    in_sh = (_named(mesh, state_spec), _named(mesh, bspec))
+    out_sh = (_named(mesh, state_spec), metrics_spec)
+    return round_fn, in_sh, out_sh, (state_abs, b_abs)
+
+
+# ----------------------------------------------------------------------
+# serve
+# ----------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, mesh, *, batch: int, seq: int,
+                      mode: str = "fsdp", batch_axes=("data",)):
+    cfg = model.config
+    p_abs = abstract_params(model)
+    b_abs = input_specs(cfg, mode="prefill", batch=batch, seq=seq)
+    cache_abs = jax.eval_shape(partial(model.init_cache, batch, seq))
+    baxes = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    pspec = param_specs(p_abs, mesh, mode=mode)
+    bspec = batch_specs(b_abs, batch_axes=baxes)
+    cspec = cache_specs(cache_abs, mesh, batch_axes=baxes)
+
+    def prefill_step(params, batch):
+        with activation_sharding(mesh, baxes):
+            return model.prefill(params, batch, seq)
+
+    in_sh = (_named(mesh, pspec), _named(mesh, bspec))
+    out_sh = (None, _named(mesh, cspec))
+    return prefill_step, in_sh, out_sh, (p_abs, b_abs)
+
+
+def make_decode_step(model: Model, mesh, *, batch: int, seq: int,
+                     mode: str = "fsdp", batch_axes=("data",)):
+    """serve_step: ONE new token against a seq-length cache."""
+    cfg = model.config
+    p_abs = abstract_params(model)
+    tok_abs = input_specs(cfg, mode="decode", batch=batch, seq=seq)["token"]
+    cache_abs = jax.eval_shape(partial(model.init_cache, batch, seq))
+    baxes = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    pspec = param_specs(p_abs, mesh, mode=mode)
+    tspec = P(baxes, None) if batch > 1 else P()
+    cspec = cache_specs(cache_abs, mesh, batch_axes=baxes)
+
+    def decode_step(params, token, cache):
+        with activation_sharding(mesh, baxes if batch > 1 else None):
+            return model.decode_step(params, token, cache)
+
+    in_sh = (_named(mesh, pspec), NamedSharding(mesh, tspec),
+             _named(mesh, cspec))
+    out_sh = (None, _named(mesh, cspec))
+    return decode_step, in_sh, out_sh, (p_abs, tok_abs, cache_abs)

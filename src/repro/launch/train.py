@@ -1,0 +1,173 @@
+"""Training launcher.
+
+Two modes:
+* ``--engine sim``   — the paper's cross-silo simulation (N clients on
+  one host; any algorithm; paper datasets).  This is the e2e driver the
+  benchmarks use.
+* ``--engine crosspod`` — the distributed FedBack engine on a real mesh
+  (pods × data × model).  On TPU hardware this is the production entry
+  point; on CPU it runs reduced configs over forced host devices
+  (``--host-devices``).
+
+    PYTHONPATH=src python -m repro.launch.train --engine sim \\
+        --dataset mnist --algorithm fedback --rate 0.1 --rounds 200
+    PYTHONPATH=src python -m repro.launch.train --engine crosspod \\
+        --arch granite-3-2b --reduced --rounds 10 --host-devices 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _sim(args):
+    import jax
+    from repro.configs import paper_cifar, paper_mnist
+    from repro.checkpoint import save_checkpoint
+    from repro.core import init_state, make_eval_fn, make_round_fn
+    from repro.data import federated_arrays, make_synthetic_cifar, \
+        make_synthetic_mnist
+    from repro.models.mlp import (
+        cnn_logits, init_cnn, init_mlp, make_loss_and_acc_fn, make_loss_fn,
+        mlp_logits)
+
+    if args.dataset == "mnist":
+        ds = make_synthetic_mnist()
+        data, test = federated_arrays(ds, n_clients=args.clients,
+                                      scheme="label_shard")
+        params0, logits = init_mlp(jax.random.PRNGKey(0)), mlp_logits
+        cfg = paper_mnist.fl_config(args.algorithm, args.rate,
+                                    n_clients=args.clients)
+    else:
+        ds = make_synthetic_cifar()
+        data, test = federated_arrays(ds, n_clients=args.clients,
+                                      scheme="dirichlet", beta=0.5)
+        params0, logits = init_cnn(jax.random.PRNGKey(0)), cnn_logits
+        cfg = paper_cifar.fl_config(args.algorithm, args.rate,
+                                    n_clients=args.clients)
+
+    state = init_state(cfg, params0)
+    round_fn = make_round_fn(cfg, make_loss_fn(logits), data)
+    eval_fn = make_eval_fn(make_loss_and_acc_fn(logits))
+    cum = 0
+    for k in range(args.rounds):
+        state, m = round_fn(state)
+        cum += int(m.num_events)
+        if k % args.log_every == 0 or k == args.rounds - 1:
+            loss, acc = eval_fn(state, test["x"], test["y"])
+            print(f"round {k:4d} events={int(m.num_events):3d} cum={cum:6d}"
+                  f" loss={float(loss):.4f} acc={float(acc):.4f}",
+                  flush=True)
+        if args.ckpt_dir and k and k % 100 == 0:
+            save_checkpoint(args.ckpt_dir, k, state)
+
+
+def _crosspod(args):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.core.controller import ControllerConfig
+    from repro.core.crosspod import (
+        CrossPodConfig, init_cross_pod_state, make_cross_pod_round)
+    from repro.models.api import build_model
+    from repro.sharding.actshard import activation_sharding
+    from repro.sharding.specs import param_specs, pod_stacked_specs
+
+    n_dev = len(jax.devices())
+    pods = args.pods
+    rest = n_dev // pods
+    dshape = (pods, max(rest // args.model_par, 1), args.model_par)
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:dshape[0] * dshape[1] * dshape[2]])
+        .reshape(dshape), ("pod", "data", "model"))
+    print(f"mesh: {dict(mesh.shape)}")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=2, d_model=128, vocab_size=512,
+                          remat=False)
+    model = build_model(cfg)
+    cp = CrossPodConfig(
+        n_pods=pods, rho=args.rho, lr=args.lr, local_steps=args.local_steps,
+        controller=ControllerConfig(K=args.gain, alpha=0.9,
+                                    target_rate=args.rate))
+
+    def sharded_loss(params, batch):
+        with activation_sharding(mesh, "data"):
+            return model.loss(params, batch)
+
+    round_fn = make_cross_pod_round(cp, sharded_loss)
+    params0 = model.init(jax.random.PRNGKey(0))
+    state = init_cross_pod_state(cp, params0)
+
+    pspec = param_specs(jax.eval_shape(lambda: params0), mesh, mode="fsdp")
+    pod_pspec = pod_stacked_specs(pspec)
+    named = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    state_sh = type(state)(
+        theta=named(pod_pspec), lam=named(pod_pspec),
+        z_prev=named(pod_pspec),
+        ctrl=jax.tree.map(lambda _: NamedSharding(mesh, P()), state.ctrl),
+        rng=NamedSharding(mesh, P()), round=NamedSharding(mesh, P()))
+    batch_sh = NamedSharding(mesh, P("pod", None, "data", None))
+    step = jax.jit(round_fn, in_shardings=(
+        state_sh, {"tokens": batch_sh, "labels": batch_sh}),
+        out_shardings=(state_sh, None))
+
+    rng = np.random.default_rng(0)
+    state = jax.device_put(state, state_sh)
+    cum = 0
+    for k in range(args.rounds):
+        toks = rng.integers(
+            0, cfg.vocab_size,
+            (pods, cp.local_steps, args.batch, args.seq + 1))
+        batch = jax.device_put(
+            {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+             "labels": jnp.asarray(toks[..., 1:], jnp.int32)}, (
+                {"tokens": batch_sh, "labels": batch_sh}))
+        state, m = step(state, batch)
+        cum += int(m.num_events)
+        print(f"round {k:3d} events={np.asarray(m.events).astype(int)} "
+              f"cum={cum} loss={float(m.train_loss):.4f}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", default="sim", choices=["sim", "crosspod"])
+    # sim
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "cifar"])
+    ap.add_argument("--algorithm", default="fedback")
+    ap.add_argument("--clients", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--ckpt-dir", default=None)
+    # crosspod
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--model-par", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--rho", type=float, default=1e-3)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--gain", type=float, default=0.05)
+    ap.add_argument("--host-devices", type=int, default=0)
+    # shared
+    ap.add_argument("--rate", type=float, default=0.1)
+    ap.add_argument("--rounds", type=int, default=100)
+    args = ap.parse_args()
+
+    if args.host_devices and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+    (_sim if args.engine == "sim" else _crosspod)(args)
+
+
+if __name__ == "__main__":
+    main()

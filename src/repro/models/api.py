@@ -1,0 +1,205 @@
+"""Public model API: configuration + build.
+
+``build_model(cfg)`` returns a ``Model`` bundle of pure functions
+(init / loss / train_step pieces / prefill / decode_step / input_specs)
+shared by the smoke tests, the launchers and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 64
+    ssd_intra_dtype: str = "float32"  # §Perf: bf16 halves intra-chunk HBM
+    attn_every: int = 0
+    # attention
+    sliding_window: int = 0
+    rope_theta: float = 1e4
+    kv_block: int = 512
+    # modality frontends (stubbed: precomputed embeddings)
+    prefix_tokens: int = 0
+    frontend_dim: int = 0
+    encoder_only: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "float32"
+    loss_chunk: int = 0
+    remat: bool = True
+    remat_group: int = 1  # layers per checkpoint unit: stash ∝ L/group
+    unroll_inner: bool = False  # unroll inner (kv-block) loops — used by
+    # the dry-run so XLA's cost analysis (which counts while bodies
+    # once) sees the true FLOPs
+    unroll_layers: bool = False  # unroll the layer scan itself (cost-
+    # correction lowerings only: 1–2 layer variants)
+    source: str = ""  # citation for the assigned architecture
+
+    @property
+    def param_dtype(self):
+        return _DTYPES[self.dtype]
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded to a 256 multiple: shards cleanly over the
+        model axis (Megatron vocab-parallel head); padded logit columns
+        are masked in the loss and sliced off in serving."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.encoder_only and self.family != "audio"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM/hybrid state or sliding window)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test variant of the same family (≤2 layers, small dims)."""
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 2),
+            d_model=min(self.d_model, 128),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=min(self.head_dim, 32),
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4),
+            top_k=min(self.top_k, 2),
+            # drop-free capacity so prefill/decode agree exactly in tests
+            capacity_factor=float(max(self.num_experts, 1)),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=min(self.ssm_head_dim, 16),
+            chunk=8,
+            attn_every=2 if self.attn_every else 0,
+            sliding_window=min(self.sliding_window, 16)
+            if self.sliding_window else 0,
+            prefix_tokens=min(self.prefix_tokens, 4),
+            frontend_dim=min(self.frontend_dim, 32)
+            if self.frontend_dim else 0,
+            kv_block=8,
+            loss_chunk=0,
+            dtype="float32",
+            remat=False,
+        )
+        if self.family == "hybrid":
+            kw["num_layers"] = 4  # 2 groups of 2
+        kw.update(overrides)
+        return dataclasses.replace(self, **kw)
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable  # rng -> params
+    loss: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch, max_seq) -> (logits, cache)
+    decode_step: Callable  # (params, token, cache) -> (logits, cache)
+    init_cache: Callable  # (batch, max_seq) -> cache pytree
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda rng: tf.init_params(rng, cfg),
+        loss=lambda params, batch: tf.loss_fn(cfg, params, batch),
+        prefill=lambda params, batch, max_seq=None: tf.prefill(
+            cfg, params, batch, max_seq),
+        decode_step=lambda params, token, cache: tf.decode_step(
+            cfg, params, token, cache),
+        init_cache=lambda batch, max_seq: tf.init_cache(cfg, batch, max_seq),
+    )
+
+
+# ----------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct) per workload shape — the dry-run's
+# stand-ins: weak-type-correct, shardable, zero allocation.
+# ----------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, *, mode: str, batch: int, seq: int):
+    """Returns the abstract batch pytree for train/prefill/decode."""
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, cfg.param_dtype)
+
+    if mode == "train":
+        if cfg.family == "audio":
+            return {"features": emb(batch, seq, cfg.frontend_dim),
+                    "labels": tok(batch, seq)}
+        if cfg.family == "vlm":
+            text = seq - cfg.prefix_tokens
+            return {"patches": emb(batch, cfg.prefix_tokens, cfg.frontend_dim),
+                    "tokens": tok(batch, text), "labels": tok(batch, text)}
+        return {"tokens": tok(batch, seq), "labels": tok(batch, seq)}
+    if mode == "prefill":
+        if cfg.family == "vlm":
+            text = seq - cfg.prefix_tokens
+            return {"patches": emb(batch, cfg.prefix_tokens, cfg.frontend_dim),
+                    "tokens": tok(batch, text)}
+        return {"tokens": tok(batch, seq)}
+    if mode == "decode":
+        return {"token": tok(batch, 1)}
+    raise ValueError(mode)
+
+
+def abstract_params(model: Model):
+    """Shape-only param pytree via eval_shape (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model: Model, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_seq))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    model = build_model(cfg)
+    shapes = abstract_params(model)
+    import numpy as np
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: top_k of num_experts)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    model = build_model(cfg)
+    shapes = abstract_params(model)
+    import numpy as np
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(k in ("w_gate", "w_up", "w_down") and "moe" in keys
+               for k in keys):
+            expert += int(np.prod(leaf.shape))
+    active_expert = expert * cfg.top_k // cfg.num_experts
+    return total - expert + active_expert

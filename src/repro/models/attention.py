@@ -1,0 +1,174 @@
+"""GQA attention: blockwise (memory-efficient) prefill + cached decode.
+
+The training/prefill path never materializes the (S, S) score matrix:
+it scans KV blocks with an online-softmax carry, so 32k-token prefill
+fits activation memory even on the XLA (non-Pallas) path.  The Pallas
+flash kernel (repro.kernels.flash_attention) is the TPU hot path for the
+same contraction; this module is the lowering-friendly fallback and the
+oracle the kernel is tested against.
+
+Masks are index predicates (never materialized tensors):
+  causal        kv ≤ q
+  sliding(W)    q−W < kv ≤ q          (Mixtral; Zamba2 shared block @500k)
+  prefix(P)     kv ≤ q  or  kv < P    (PaliGemma prefix-LM)
+  bidir         all                   (HuBERT encoder)
+
+Note: the blockwise scan visits *all* KV blocks and masks — causal
+attention therefore costs ~2× its optimal FLOPs on this path. This is
+deliberate baseline honesty (see EXPERIMENTS §Perf for the hillclimb
+that claws it back; the flash kernel's triangular grid does it on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model, num_heads, num_kv_heads, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+
+
+def _allowed(q_pos, kv_pos, *, mask_mode, window, prefix_len):
+    """Boolean mask (…, Sq, Skv) from position indices."""
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    if mask_mode == "bidir":
+        ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    elif mask_mode == "causal":
+        ok = k <= q
+    elif mask_mode == "prefix":
+        ok = (k <= q) | (k < prefix_len)
+    else:
+        raise ValueError(mask_mode)
+    if window:
+        ok = ok & (k > q - window)
+    return ok
+
+
+def blockwise_attention(q, k, v, *, q_positions, kv_positions, kv_valid=None,
+                        mask_mode="causal", window=0, prefix_len=0,
+                        kv_block=512, unroll=False):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Kv, hd); positions: (Sq,) / (Skv,).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+    if kv_valid is None:
+        kv_valid = jnp.ones((skv,), bool)
+
+    # pad KV to a block multiple
+    nb = -(-skv // kv_block)
+    pad = nb * kv_block - skv
+    if pad:
+        padkv = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k, v = padkv(k), padkv(v)
+        kv_positions = jnp.pad(kv_positions, (0, pad))
+        kv_valid = jnp.pad(kv_valid, (0, pad))
+
+    qg = (q * scale).reshape(b, sq, kvh, g, hd)
+    kb = k.reshape(b, nb, kv_block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pos_b = kv_positions.reshape(nb, kv_block)
+    val_b = kv_valid.reshape(nb, kv_block)
+
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, pos, val = xs
+        s = jnp.einsum("bskgh,btkh->bskgt", qg, kblk,
+                       preferred_element_type=jnp.float32)
+        ok = _allowed(q_positions, pos, mask_mode=mask_mode, window=window,
+                      prefix_len=prefix_len) & val[None, :]  # (Sq, t)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkh->bskgh", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pos_b, val_b),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_forward(p, x, *, positions, rope_theta, num_heads, num_kv_heads,
+                      head_dim, mask_mode="causal", window=0, prefix_len=0,
+                      kv_block=512, return_kv=False, unroll=False):
+    """Self-attention over x: (B, S, d)."""
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, num_kv_heads, head_dim)
+    q = apply_rope(q, positions[None, :], rope_theta)
+    k = apply_rope(k, positions[None, :], rope_theta)
+    out = blockwise_attention(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        mask_mode=mask_mode, window=window, prefix_len=prefix_len,
+        kv_block=min(kv_block, s), unroll=unroll)
+    y = out.reshape(b, s, num_heads * head_dim) @ p["wo"]
+    return (y, (k, v)) if return_kv else y
+
+
+def attention_decode(p, x, kv_cache, cache_pos, *, rope_theta, num_heads,
+                     num_kv_heads, head_dim, window=0):
+    """Single-token decode against a (B, S_max, Kv, hd) ring/linear cache.
+
+    x: (B, 1, d); cache_pos: () int32 — the position being generated.
+    With a sliding window the cache is a ring buffer of size W and
+    absolute positions are reconstructed modulo W.
+    """
+    b = x.shape[0]
+    k_cache, v_cache = kv_cache
+    s_max = k_cache.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, 1, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, num_kv_heads, head_dim)
+    pos = cache_pos[None]  # (1,)
+    q = apply_rope(q, pos[None, :], rope_theta)
+    k = apply_rope(k, pos[None, :], rope_theta)
+
+    slot = jnp.where(window > 0, cache_pos % s_max, cache_pos) if window \
+        else cache_pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+
+    # absolute positions of cache slots
+    idx = jnp.arange(s_max)
+    if window:
+        # ring buffer: slot holds the latest position ≡ slot (mod s_max)
+        kv_pos = cache_pos - ((cache_pos - idx) % s_max)
+        valid = (kv_pos >= 0) & (kv_pos >= cache_pos - window + 1)
+    else:
+        kv_pos = idx
+        valid = idx <= cache_pos
+
+    g = num_heads // num_kv_heads
+    scale = head_dim ** -0.5
+    qg = (q * scale).reshape(b, num_kv_heads, g, head_dim).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, num_heads * head_dim).astype(x.dtype)
+    return out @ p["wo"], (k_cache, v_cache)

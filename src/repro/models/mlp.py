@@ -1,0 +1,97 @@
+"""The paper's experiment models.
+
+* ``init_mlp`` / MNIST classifier — single hidden layer, 200 ReLU units
+  (paper §5 MNIST).
+* ``init_cnn`` / CIFAR classifier — 3 conv + 3 fc layers, ReLU
+  (paper §5 CIFAR-10).
+
+Pure-functional: params are dict pytrees; apply functions take flat
+pixel inputs (the data pipeline stores images flat).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, n_in, n_out):
+    wk, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / n_in)
+    return {
+        "w": jax.random.normal(wk, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def init_mlp(key, n_in: int = 784, hidden: int = 200, n_out: int = 10):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": _dense_init(k1, n_in, hidden),
+            "fc2": _dense_init(k2, hidden, n_out)}
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = jnp.sqrt(2.0 / (kh * kw * cin))
+    return {
+        "w": jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def init_cnn(key, image_hw: int = 32, channels: int = 3, n_out: int = 10):
+    ks = jax.random.split(key, 6)
+    params = {
+        "conv1": _conv_init(ks[0], 3, 3, channels, 32),
+        "conv2": _conv_init(ks[1], 3, 3, 32, 64),
+        "conv3": _conv_init(ks[2], 3, 3, 64, 64),
+    }
+    feat = (image_hw // 8) ** 2 * 64  # three stride-2 pools
+    params["fc1"] = _dense_init(ks[3], feat, 128)
+    params["fc2"] = _dense_init(ks[4], 128, 64)
+    params["fc3"] = _dense_init(ks[5], 64, n_out)
+    return params
+
+
+def _conv_block(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"])
+    return jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_logits(params, x, image_hw: int = 32, channels: int = 3):
+    x = x.reshape(x.shape[0], image_hw, image_hw, channels)
+    for name in ("conv1", "conv2", "conv3"):
+        x = _conv_block(params[name], x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_loss_fn(logits_fn):
+    def loss_fn(params, x, y):
+        return cross_entropy(logits_fn(params, x), y)
+
+    return loss_fn
+
+
+def make_loss_and_acc_fn(logits_fn):
+    def fn(params, x, y):
+        logits = logits_fn(params, x)
+        loss = cross_entropy(logits, y)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    return fn

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer with scatter-based top-k dispatch.
+
+Routing follows Mixtral/Qwen3: softmax router, top-k experts per token,
+gates renormalized over the selected k.  Dispatch is *scatter-based*
+(position-in-expert via a per-group cumulative count, then
+``at[...].set`` into an (E, C, d) buffer) rather than the classic
+one-hot dispatch einsum — the einsum formulation costs
+T²·k·cf·d "phantom" FLOPs that would poison every roofline number at
+32k-token shards; scatter costs bytes only, and the expert GEMMs then
+account for exactly the *active* FLOPs (6·N_active·D accounting works).
+
+Tokens are grouped by batch row (GShard-style groups): capacity and
+dispatch are computed per group, which keeps the cumulative count local
+to a data shard — no cross-shard cumsum, and under expert-parallel
+sharding XLA lowers the buffer exchange to an all-to-all over the
+``model`` axis.
+
+Overflow tokens (beyond capacity C = ceil(S·k/E · cf)) are dropped —
+their combine weight is zero, as in Switch/GShard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.actshard import constrain_batch
+
+from .layers import dense_init
+
+
+def moe_init(key, d_model, d_ff, num_experts, dtype):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    se = (2.0 / (d_model + d_ff)) ** 0.5
+    shape = (num_experts, d_model, d_ff)
+
+    def experts(k):
+        return (jax.random.normal(k, shape, jnp.float32) * se).astype(dtype)
+
+    return {
+        "router": dense_init(kr, d_model, num_experts, jnp.float32),
+        "w_gate": experts(kg),
+        "w_up": experts(ku),
+        "w_down": (jax.random.normal(kd, (num_experts, d_ff, d_model),
+                                     jnp.float32) * se).astype(dtype),
+    }
+
+
+def moe_apply(p, x, *, top_k, capacity_factor=1.25, return_aux=True):
+    """x: (B, S, d) → (out (B, S, d), aux load-balance loss)."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    cap = int(-(-s * top_k // e) * capacity_factor)
+    cap = max(min(cap, s * top_k), 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"])  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, top_k)  # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-group (batch-row) dispatch ------------------------------
+    r = s * top_k
+    eids_f = eids.reshape(b, r)  # row-major: token-major then k
+    gates_f = gates.reshape(b, r)
+    # position of each row within its expert (per group)
+    onehot = jax.nn.one_hot(eids_f, e, dtype=jnp.int32)  # (B, R, E)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=1), eids_f[..., None], axis=-1
+    )[..., 0] - 1  # (B, R)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)  # dropped rows land in a spill slot
+
+    tok_rows = constrain_batch(jnp.repeat(x, top_k, axis=1))  # (B, R, d)
+
+    def dispatch(rows, eid, slt):
+        buf = jnp.zeros((e, cap + 1, d), rows.dtype)
+        return buf.at[eid, slt].set(rows)[:, :cap]
+
+    # explicit batch pinning: GSPMD's scatter/gather partitioner falls
+    # back to replicate-and-all-reduce when operand shardings are left
+    # to inference (measured 16 GiB/layer of gather all-reduces)
+    buffers = constrain_batch(
+        jax.vmap(dispatch)(tok_rows, eids_f, slot))  # (B, E, C, d)
+
+    # --- expert computation (active FLOPs only) -----------------------
+    hgate = jax.nn.silu(jnp.einsum("becd,edf->becf", buffers, p["w_gate"]))
+    hup = jnp.einsum("becd,edf->becf", buffers, p["w_up"])
+    hout = constrain_batch(
+        jnp.einsum("becf,efd->becd", hgate * hup, p["w_down"]))
+
+    # --- combine -------------------------------------------------------
+    def gather(buf, eid, slt):
+        return buf[eid, jnp.minimum(slt, cap - 1)]
+
+    rows_out = constrain_batch(
+        jax.vmap(gather)(hout, eids_f, slot))  # (B, R, d)
+    rows_out = jnp.where(keep[..., None], rows_out, 0.0)
+    out = (rows_out.reshape(b, s, top_k, d)
+           * gates.astype(rows_out.dtype)[..., None]).sum(axis=2)
+
+    if not return_aux:
+        return out, jnp.zeros((), jnp.float32)
+    # Switch-style load balance: E·Σ_e f_e·p̄_e (top-1 dispatch fraction)
+    top1 = eids[..., 0].reshape(-1)
+    f = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=0)
+    pbar = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(f * pbar)
+    return out, aux
+
+
+def moe_ref(p, x, *, top_k):
+    """Dense oracle: computes every expert for every token (test-only)."""
+    b, s, d = x.shape
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, eids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    hg = jax.nn.silu(jnp.einsum("bsd,edf->besf", x, p["w_gate"]))
+    hu = jnp.einsum("bsd,edf->besf", x, p["w_up"])
+    ho = jnp.einsum("besf,efd->besd", hg * hu, p["w_down"])  # (B,E,S,d)
+    sel = jax.nn.one_hot(eids, ho.shape[1], dtype=jnp.float32)  # (B,S,k,E)
+    w = (sel * gates[..., None]).sum(2)  # (B,S,E)
+    return jnp.einsum("bse,besd->bsd", w.astype(ho.dtype), ho)

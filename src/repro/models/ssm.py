@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer.
+
+Faithful to Dao & Gu 2024 (arXiv:2405.21060) with n_groups=1:
+
+  in_proj  : d → [z (d_in), x (d_in), B (N), C (N), dt (H)]
+  conv1d   : causal depthwise over the concatenated (x, B, C) channels
+  SSD core : h_t = a_t h_{t-1} + dt_t (B_t ⊗ x_t),  a_t = exp(A·dt_t)
+             y_t = C_t · h_t + D ⊙ x_t           (scalar-per-head A < 0)
+  gate     : y ← RMSNorm(y · silu(z)); out_proj: d_in → d
+
+Training uses the *chunked* SSD algorithm: intra-chunk attention-like
+term through the decay kernel L_ij = exp(Σ log a) (lower-triangular),
+plus an inter-chunk scan over compressed chunk states (B, H, P, N) —
+O(S·Q) work instead of O(S²), and the chunk scan is the TPU Pallas
+kernel's target (repro.kernels.ssd_scan validates against this module).
+
+Decode is the O(1) recurrence with a (conv ring, ssm state) cache —
+this is what makes ``long_500k`` viable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+
+
+def ssm_dims(d_model, expand, ssm_state, head_dim):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, d_model, *, expand, ssm_state, head_dim, conv_kernel,
+             dtype):
+    d_inner, n_heads, conv_dim = ssm_dims(d_model, expand, ssm_state,
+                                          head_dim)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * ssm_state + n_heads
+    return {
+        "in_proj": dense_init(k1, d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (conv_kernel, conv_dim), jnp.float32)
+                   * (1.0 / conv_kernel) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(1e-3, 0.1, n_heads).astype(jnp.float32)) - 1.0 + 1e-9),
+        "norm_g": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(k3, d_inner, d_model, dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, ssm_state, n_heads):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    bmat = zxbcdt[..., 2 * d_inner:2 * d_inner + ssm_state]
+    cmat = zxbcdt[..., 2 * d_inner + ssm_state:2 * d_inner + 2 * ssm_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B, S, Cdim) with kernel (K, Cdim)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, *, chunk,
+                intra_dtype=None):
+    """Chunked SSD core.
+
+    x: (B, S, H, P); dt: (B, S, H); bmat/cmat: (B, S, N).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+
+    Precision policy (§Perf hillclimb #1 — byte attribution showed
+    *dtype converts* were >40% of the layer's HBM traffic under the
+    original everything-fp32 policy): all LARGE tensors (x, B, C, the
+    5-D decay kernel, chunk states) stay in the input dtype
+    (``intra_dtype`` overrides); the numerically critical SMALL
+    tensors — per-step log-decays, their cumulative sums, and the
+    inter-chunk state scan carry — are fp32 always.
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = chunk
+    s_orig = s
+    if s % q:
+        # pad with dt=0 steps: decay exp(0·A)=1, zero input → h untouched
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+    wide = intra_dtype or x.dtype  # big-tensor dtype (bf16 at scale)
+    a = -jnp.exp(a_log)  # (H,) negative
+    loga = (dt.astype(jnp.float32) * a)  # (B, S, H) log decay per step
+
+    xc = x.reshape(b, nc, q, h, p).astype(wide)
+    dtc = dt.reshape(b, nc, q, h)  # fp32 (from softplus)
+    bc = bmat.reshape(b, nc, q, n).astype(wide)
+    cc = cmat.reshape(b, nc, q, n).astype(wide)
+    logac = loga.reshape(b, nc, q, h)
+    cum = jnp.cumsum(logac, axis=2)  # (B, nc, Q, H) inclusive, fp32
+
+    # --- intra-chunk (quadratic within the chunk) ---------------------
+    g = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                   preferred_element_type=jnp.float32)  # (B, nc, Q, Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    li = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(li[None, None, :, :, None], seg,
+                              -jnp.inf)).astype(wide)
+    m = g.astype(wide)[..., None] * decay  # (B, nc, Qi, Qj, H)
+    xdt = xc * dtc[..., None].astype(wide)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xdt,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states + inter-chunk scan -------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum).astype(wide)
+    states = jnp.einsum("bcjhp,bcjn,bcjh->bchpn", xdt, bc, decay_to_end,
+                        preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, H) fp32
+
+    def scan_body(h_prev, xs):
+        st, dec = xs  # (B, H, P, N), (B, H)
+        h_new = h_prev * dec[:, :, None, None] + st.astype(jnp.float32)
+        return h_new, h_prev.astype(wide)
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_last, h_befores = jax.lax.scan(
+        scan_body,
+        h0,
+        (states.astype(wide).transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_befores.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, h_prevs,
+                         jnp.exp(cum).astype(wide),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], h_last
+
+
+def ssm_forward(params, hidden, *, expand, ssm_state, head_dim, conv_kernel,
+                chunk, return_state=False, intra_dtype=None):
+    """Full Mamba-2 mixer. hidden: (B, S, d)."""
+    b, s, d = hidden.shape
+    d_inner, n_heads, conv_dim = ssm_dims(d, expand, ssm_state, head_dim)
+    zxbcdt = hidden @ params["in_proj"]
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, d_inner, ssm_state, n_heads)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x, bmat, cmat = (xbc[..., :d_inner],
+                     xbc[..., d_inner:d_inner + ssm_state],
+                     xbc[..., d_inner + ssm_state:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])  # (B, S, H)
+    xh = x.reshape(b, s, n_heads, head_dim)
+    y, h_last = ssd_chunked(xh, dt, params["A_log"], bmat, cmat, chunk=chunk,
+                            intra_dtype=intra_dtype)
+    y = y.astype(hidden.dtype) + (params["D"].astype(hidden.dtype)
+                                  [None, None, :, None] * xh)
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_g"])
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, h_last
+    return out
+
+
+# ----------------------------------------------------------------------
+# O(1) decode recurrence
+# ----------------------------------------------------------------------
+
+def ssm_cache_init(batch, d_model, *, expand, ssm_state, head_dim,
+                   conv_kernel, dtype):
+    d_inner, n_heads, conv_dim = ssm_dims(d_model, expand, ssm_state,
+                                          head_dim)
+    return {
+        "conv": jnp.zeros((batch, conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, head_dim, ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, hidden, cache, *, expand, ssm_state, head_dim,
+                    conv_kernel):
+    """hidden: (B, 1, d) → (out (B, 1, d), new cache)."""
+    b, _, d = hidden.shape
+    d_inner, n_heads, conv_dim = ssm_dims(d, expand, ssm_state, head_dim)
+    zxbcdt = hidden[:, 0] @ params["in_proj"]  # (B, proj)
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, d_inner, ssm_state, n_heads)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    xbc = jax.nn.silu(conv_out + params["conv_b"])
+    x, bmat, cmat = (xbc[:, :d_inner], xbc[:, d_inner:d_inner + ssm_state],
+                     xbc[:, d_inner + ssm_state:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt)  # (B, H)
+    xh = x.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    upd = (dt[..., None] * xh)[..., None] * bmat[:, None, None, :]
+    h_new = cache["ssm"] * a[..., None, None] + upd  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cmat)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, d_inner).astype(hidden.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_g"])
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"conv": window[:, 1:], "ssm": h_new}

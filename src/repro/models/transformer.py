@@ -1,0 +1,506 @@
+"""Unified stack assembler for the assigned architecture families.
+
+One init/forward pair covers:
+  dense   — [GQA attn + SwiGLU] × L                 (deepseek/granite/phi3)
+  moe     — [GQA attn + top-k MoE] × L              (qwen3/mixtral/moonshot)
+  ssm     — [Mamba-2 mixer] × L                     (mamba2)
+  hybrid  — Mamba-2 backbone + ONE shared attn+MLP block applied after
+            every ``attn_every`` mamba layers (Zamba2's shared-block
+            design: the same parameters are re-applied at 9 depths)
+  vlm     — dense decoder with a patch-embedding projector and
+            prefix-LM masking over the image tokens (PaliGemma)
+  audio   — bidirectional encoder over frame embeddings (HuBERT)
+
+Layer parameters are stacked (leading L axis) and the forward pass is a
+(rematerialized) ``lax.scan``, so deepseek-67b's 95 layers lower to the
+same HLO size as 2 layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.actshard import constrain_batch
+
+from .attention import attention_decode, attention_forward, attention_init
+from .layers import (
+    chunked_lm_loss,
+    cross_entropy_logits,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    stacked_init,
+    swiglu,
+    swiglu_init,
+)
+from .moe import moe_apply, moe_init
+from .ssm import (
+    ssm_cache_init,
+    ssm_decode_step,
+    ssm_forward,
+    ssm_init,
+)
+
+# ----------------------------------------------------------------------
+# per-layer blocks
+# ----------------------------------------------------------------------
+
+
+def _attn_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": attention_init(k1, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim,
+                               cfg.param_dtype),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.family in ("moe",):
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            cfg.param_dtype)
+    else:
+        p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def _attn_block_apply(cfg, p, h, positions, *, mask_mode, prefix_len,
+                      window, return_kv=False):
+    aux = jnp.zeros((), jnp.float32)
+    h = constrain_batch(h)  # re-pin batch sharding inside the scan body
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    att = attention_forward(
+        p["attn"], x, positions=positions, rope_theta=cfg.rope_theta,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, mask_mode=mask_mode, prefix_len=prefix_len,
+        window=window, kv_block=cfg.kv_block, return_kv=return_kv,
+        unroll=cfg.unroll_inner)
+    if return_kv:
+        att, kv = att
+    h = h + att
+    x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_apply(p["moe"], x, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
+    else:
+        y = swiglu(p["mlp"], x)
+    h = constrain_batch(h + y)
+    return (h, aux, kv) if return_kv else (h, aux)
+
+
+def _attn_block_decode(cfg, p, h, kv_cache, pos, *, window):
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    att, kv_cache = attention_decode(
+        p["attn"], x, kv_cache, pos, rope_theta=cfg.rope_theta,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, window=window)
+    h = h + att
+    x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_apply(p["moe"], x, top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor,
+                         return_aux=False)
+    else:
+        y = swiglu(p["mlp"], x)
+    return h + y, kv_cache
+
+
+def _ssm_block_init(key, cfg):
+    return {
+        "ln": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ssm": ssm_init(key, cfg.d_model, expand=cfg.expand,
+                        ssm_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                        conv_kernel=cfg.conv_kernel, dtype=cfg.param_dtype),
+    }
+
+
+def _ssm_block_apply(cfg, p, h):
+    h = constrain_batch(h)
+    x = rmsnorm(h, p["ln"], cfg.norm_eps)
+    return h + ssm_forward(
+        p["ssm"], x, expand=cfg.expand, ssm_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel,
+        chunk=cfg.chunk,
+        intra_dtype=jnp.float32 if cfg.ssd_intra_dtype == "float32_forced"
+        else None)
+
+
+def _ssm_block_decode(cfg, p, h, cache):
+    x = rmsnorm(h, p["ln"], cfg.norm_eps)
+    y, cache = ssm_decode_step(
+        p["ssm"], x, cache, expand=cfg.expand, ssm_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel)
+    return h + y, cache
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    keys = jax.random.split(key, 8)
+    params = {"final_ln": rmsnorm_init(cfg.d_model, cfg.param_dtype)}
+    if cfg.family == "audio":
+        params["frontend_proj"] = dense_init(
+            keys[3], cfg.frontend_dim, cfg.d_model, cfg.param_dtype)
+    else:
+        params["embed"] = embed_init(keys[0], cfg.vocab_padded,
+                                     cfg.d_model, cfg.param_dtype)
+    params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_padded,
+                                   cfg.param_dtype)
+    if cfg.family == "vlm":
+        params["patch_proj"] = dense_init(
+            keys[4], cfg.frontend_dim, cfg.d_model, cfg.param_dtype)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        params["layers"] = stacked_init(
+            lambda k: _attn_block_init(k, cfg), keys[2], cfg.num_layers)
+    elif cfg.family == "ssm":
+        params["layers"] = stacked_init(
+            lambda k: _ssm_block_init(k, cfg), keys[2], cfg.num_layers)
+    elif cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_every == 0
+        params["layers"] = stacked_init(
+            lambda k: _ssm_block_init(k, cfg), keys[2], cfg.num_layers)
+        params["shared"] = _attn_block_init(keys[5], cfg)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward stacks
+# ----------------------------------------------------------------------
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _group(cfg, stacked):
+    """Reshape stacked layer params (L, ...) → (L/G, G, ...) so each
+    checkpoint unit spans G layers (activation stash ∝ L/G)."""
+    g = cfg.remat_group if cfg.num_layers % max(cfg.remat_group, 1) == 0 \
+        else 1
+    if g <= 1:
+        return 1, stacked
+    return g, jax.tree.map(
+        lambda x: x.reshape((x.shape[0] // g, g) + x.shape[1:]), stacked)
+
+
+def _stack_attn(cfg, params, h, positions, *, mask_mode, prefix_len):
+    g, stacked = _group(cfg, params["layers"])
+
+    def body(carry, glp):
+        hh, aux = carry
+        for i in range(g):
+            lp = jax.tree.map(lambda x: x[i], glp) if g > 1 else glp
+            hh, a = _attn_block_apply(cfg, lp, hh, positions,
+                                      mask_mode=mask_mode,
+                                      prefix_len=prefix_len,
+                                      window=cfg.sliding_window)
+            aux = aux + a
+        return (hh, aux), None
+
+    (h, aux), _ = jax.lax.scan(_maybe_remat(cfg, body),
+                               (h, jnp.zeros((), jnp.float32)), stacked,
+                               unroll=cfg.unroll_layers)
+    return h, aux
+
+
+def _stack_ssm(cfg, params, h):
+    g, stacked = _group(cfg, params["layers"])
+
+    def body(hh, glp):
+        for i in range(g):
+            lp = jax.tree.map(lambda x: x[i], glp) if g > 1 else glp
+            hh = _ssm_block_apply(cfg, lp, hh)
+        return hh, None
+
+    h, _ = jax.lax.scan(_maybe_remat(cfg, body), h, stacked,
+                        unroll=cfg.unroll_layers)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _stack_hybrid(cfg, params, h, positions, *, mask_mode="causal"):
+    g = cfg.attn_every
+    ng = cfg.num_layers // g
+    grouped = jax.tree.map(
+        lambda x: x.reshape((ng, g) + x.shape[1:]), params["layers"])
+    shared = params["shared"]
+
+    def group_body(carry, glp):
+        hh, aux = carry
+
+        def inner(hi, lp):
+            return _ssm_block_apply(cfg, lp, hi), None
+
+        hh, _ = jax.lax.scan(inner, hh, glp, unroll=cfg.unroll_layers)
+        hh, a = _attn_block_apply(
+            cfg, shared, hh, positions, mask_mode=mask_mode, prefix_len=0,
+            window=cfg.sliding_window)
+        return (hh, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(_maybe_remat(cfg, group_body),
+                               (h, jnp.zeros((), jnp.float32)), grouped,
+                               unroll=cfg.unroll_layers)
+    return h, aux
+
+
+def forward_hidden(cfg, params, batch):
+    """Embed inputs and run the stack → final hidden states (B, S, d),
+    plus (labels, aux) bookkeeping."""
+    if cfg.family == "audio":
+        h = batch["features"].astype(cfg.param_dtype) @ params["frontend_proj"]
+        positions = jnp.arange(h.shape[1])
+        h, aux = _stack_attn(cfg, params, h, positions, mask_mode="bidir",
+                             prefix_len=0)
+        return h, aux
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.param_dtype) @ params["patch_proj"]
+        text = jnp.take(params["embed"], batch["tokens"], axis=0)
+        h = jnp.concatenate([patches, text], axis=1)
+        positions = jnp.arange(h.shape[1])
+        h, aux = _stack_attn(cfg, params, h, positions, mask_mode="prefix",
+                             prefix_len=cfg.prefix_tokens)
+        return h, aux
+    h = constrain_batch(jnp.take(params["embed"], batch["tokens"], axis=0))
+    positions = jnp.arange(h.shape[1])
+    if cfg.family == "ssm":
+        h, aux = _stack_ssm(cfg, params, h)
+    elif cfg.family == "hybrid":
+        h, aux = _stack_hybrid(cfg, params, h, positions)
+    else:
+        h, aux = _stack_attn(cfg, params, h, positions, mask_mode="causal",
+                             prefix_len=0)
+    return h, aux
+
+
+def loss_fn(cfg, params, batch):
+    """Training loss (next-token / masked-prediction / prefix-LM CE)."""
+    h, aux = forward_hidden(cfg, params, batch)
+    h = constrain_batch(rmsnorm(h, params["final_ln"], cfg.norm_eps))
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        h = h[:, cfg.prefix_tokens:]  # loss only over text positions
+    ce = chunked_lm_loss(h, params["lm_head"], labels, cfg.loss_chunk,
+                         valid_vocab=cfg.vocab_size)
+    return ce + cfg.aux_coef * aux
+
+
+# ----------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ----------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size, max_seq, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    if cfg.family in ("dense", "moe", "vlm"):
+        s = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+        shape = (cfg.num_layers, batch_size, s, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        one = ssm_cache_init(batch_size, cfg.d_model, expand=cfg.expand,
+                             ssm_state=cfg.ssm_state,
+                             head_dim=cfg.ssm_head_dim,
+                             conv_kernel=cfg.conv_kernel, dtype=dtype)
+        return {
+            "layers": jax.tree.map(
+                lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), one),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        ng = cfg.num_layers // cfg.attn_every
+        one = ssm_cache_init(batch_size, cfg.d_model, expand=cfg.expand,
+                             ssm_state=cfg.ssm_state,
+                             head_dim=cfg.ssm_head_dim,
+                             conv_kernel=cfg.conv_kernel, dtype=dtype)
+        s = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+        kv = (ng, batch_size, s, cfg.num_kv_heads, cfg.head_dim)
+        return {
+            "layers": jax.tree.map(
+                lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), one),
+            "k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(f"no cache for family {cfg.family}")
+
+
+def prefill(cfg, params, batch, max_seq=None):
+    """Process a prompt; returns (last-token logits, filled cache).
+
+    Implemented for attention families via the blockwise path with KV
+    collection; SSM/hybrid prefill runs the chunked scan and keeps the
+    final recurrent state.
+    """
+    if cfg.family == "audio":
+        raise ValueError("encoder-only architectures have no decode path")
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)
+    mask_mode, prefix_len = "causal", 0
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.param_dtype) @ params["patch_proj"]
+        h = jnp.concatenate([patches, h], axis=1)
+        s = h.shape[1]
+        positions = jnp.arange(s)
+        mask_mode, prefix_len = "prefix", cfg.prefix_tokens
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            hh, _ = carry
+            hh, aux, kv = _attn_block_apply(
+                cfg, lp, hh, positions, mask_mode=mask_mode,
+                prefix_len=prefix_len, window=cfg.sliding_window,
+                return_kv=True)
+            return (hh, aux), kv
+
+        (h, _), (ks, vs) = jax.lax.scan(
+            _maybe_remat(cfg, body), (h, jnp.zeros((), jnp.float32)),
+            params["layers"], unroll=cfg.unroll_layers)
+        cache = _fit_kv_cache(cfg, ks, vs, max_seq, s)
+    elif cfg.family == "ssm":
+        def body(hh, lp):
+            x = rmsnorm(hh, lp["ln"], cfg.norm_eps)
+            y, st = ssm_forward(
+                lp["ssm"], x, expand=cfg.expand, ssm_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel,
+                chunk=cfg.chunk, return_state=True)
+            # conv tail: last K-1 pre-activation conv inputs
+            return hh + y, (st, _conv_tail(cfg, lp, x))
+
+        h, (ssm_states, conv_tails) = jax.lax.scan(
+            body, h, params["layers"], unroll=cfg.unroll_layers)
+        cache = {"layers": {"ssm": ssm_states, "conv": conv_tails},
+                 "pos": jnp.asarray(s, jnp.int32)}
+    else:  # hybrid
+        g = cfg.attn_every
+        ng = cfg.num_layers // g
+        grouped = jax.tree.map(
+            lambda x: x.reshape((ng, g) + x.shape[1:]), params["layers"])
+        shared = params["shared"]
+
+        def group_body(hh, glp):
+            def inner(hi, lp):
+                x = rmsnorm(hi, lp["ln"], cfg.norm_eps)
+                y, st = ssm_forward(
+                    lp["ssm"], x, expand=cfg.expand, ssm_state=cfg.ssm_state,
+                    head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel,
+                    chunk=cfg.chunk, return_state=True)
+                return hi + y, (st, _conv_tail(cfg, lp, x))
+
+            hh, inner_caches = jax.lax.scan(inner, hh, glp,
+                                            unroll=cfg.unroll_layers)
+            hh, _, kv = _attn_block_apply(
+                cfg, shared, hh, positions, mask_mode="causal", prefix_len=0,
+                window=cfg.sliding_window, return_kv=True)
+            return hh, (inner_caches, kv)
+
+        h, ((ssm_states, conv_tails), (ks, vs)) = jax.lax.scan(
+            group_body, h, grouped, unroll=cfg.unroll_layers)
+        flat = lambda x: x.reshape((cfg.num_layers,) + x.shape[2:])
+        kvc = _fit_kv_cache(cfg, ks, vs, max_seq, s)
+        cache = {"layers": {"ssm": flat(ssm_states), "conv": flat(conv_tails)},
+                 "k": kvc["k"], "v": kvc["v"],
+                 "pos": jnp.asarray(s, jnp.int32)}
+
+    h = rmsnorm(h[:, -1:], params["final_ln"], cfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return logits[..., :cfg.vocab_size], cache
+
+
+def _conv_tail(cfg, lp, x):
+    """Last (K−1) conv inputs of a mamba layer (for the decode ring)."""
+    d_inner = cfg.expand * cfg.d_model
+    zxbcdt = x @ lp["ssm"]["in_proj"]
+    xi = zxbcdt[..., d_inner:2 * d_inner]
+    bm = zxbcdt[..., 2 * d_inner:2 * d_inner + cfg.ssm_state]
+    cm = zxbcdt[..., 2 * d_inner + cfg.ssm_state:
+                2 * d_inner + 2 * cfg.ssm_state]
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    return xbc[:, -(cfg.conv_kernel - 1):]
+
+
+def _fit_kv_cache(cfg, ks, vs, max_seq, s):
+    """Pad/crop prefill KV (L, B, S, Kv, hd) into the serving cache."""
+    window = cfg.sliding_window
+    size = min(max_seq, window) if window else max_seq
+    if window and s > size:
+        # keep the last `size` positions, ring-aligned: slot = pos % size
+        ks, vs = ks[:, :, -size:], vs[:, :, -size:]
+        shift = s % size
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+    elif s < size:
+        pad = ((0, 0), (0, 0), (0, size - s), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    return {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg, params, token, cache):
+    """One token (B, 1) given a filled cache → (logits (B,1,V), cache)."""
+    if cfg.family == "audio":
+        raise ValueError("encoder-only architectures have no decode path")
+    h = jnp.take(params["embed"], token, axis=0)
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(hh, xs):
+            lp, kc, vc = xs
+            hh, (kc, vc) = _attn_block_decode(
+                cfg, lp, hh, (kc, vc), pos, window=cfg.sliding_window)
+            return hh, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"]),
+            unroll=cfg.unroll_layers)
+        new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    elif cfg.family == "ssm":
+        def body(hh, xs):
+            lp, lc = xs
+            hh, lc = _ssm_block_decode(cfg, lp, hh, lc)
+            return hh, lc
+
+        h, layer_caches = jax.lax.scan(
+            body, h, (params["layers"], cache["layers"]),
+            unroll=cfg.unroll_layers)
+        new_cache = {"layers": layer_caches, "pos": pos + 1}
+    else:  # hybrid
+        g = cfg.attn_every
+        ng = cfg.num_layers // g
+        grouped = jax.tree.map(
+            lambda x: x.reshape((ng, g) + x.shape[1:]), params["layers"])
+        gcache = jax.tree.map(
+            lambda x: x.reshape((ng, g) + x.shape[1:]), cache["layers"])
+        shared = params["shared"]
+
+        def group_body(hh, xs):
+            glp, glc, kc, vc = xs
+
+            def inner(hi, ys):
+                lp, lc = ys
+                hi, lc = _ssm_block_decode(cfg, lp, hi, lc)
+                return hi, lc
+
+            hh, glc = jax.lax.scan(inner, hh, (glp, glc),
+                                   unroll=cfg.unroll_layers)
+            hh, (kc, vc) = _attn_block_decode(
+                cfg, shared, hh, (kc, vc), pos, window=cfg.sliding_window)
+            return hh, (glc, kc, vc)
+
+        h, (glc, ks, vs) = jax.lax.scan(
+            group_body, h, (grouped, gcache, cache["k"], cache["v"]),
+            unroll=cfg.unroll_layers)
+        new_cache = {
+            "layers": jax.tree.map(
+                lambda x: x.reshape((cfg.num_layers,) + x.shape[2:]), glc),
+            "k": ks, "v": vs, "pos": pos + 1,
+        }
+
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return logits[..., :cfg.vocab_size], new_cache

@@ -1,0 +1,4 @@
+from .sgd import SGDState, sgd_init, sgd_step  # noqa: F401
+from .adam import AdamState, adam_init, adam_step  # noqa: F401
+from .prox import prox_grad_fn, solve_prox  # noqa: F401
+from .schedules import constant, cosine_decay, warmup_cosine  # noqa: F401

@@ -1,0 +1,48 @@
+"""AdamW — used by the large-architecture training steps (train_4k)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    step: jax.Array
+
+
+def adam_init(params) -> AdamState:
+    # First/second moments in fp32 regardless of param dtype (mixed precision).
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adam_step(params, grads, state: AdamState, lr, b1=0.9, b2=0.95,
+              eps=1e-8, weight_decay=0.0):
+    lr_t = lr(state.step) if callable(lr) else lr
+    step = state.step + 1
+    mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+    )
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu,
+        grads,
+    )
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(mu=mu, nu=nu, step=step)

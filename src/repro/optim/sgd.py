@@ -1,0 +1,36 @@
+"""SGD with (heavy-ball) momentum — the paper's local solver
+(lr 0.01, momentum 0.9 in both experiment suites)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: object  # pytree like params
+    step: jax.Array
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(
+        momentum=jax.tree.map(jnp.zeros_like, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def sgd_step(params, grads, state: SGDState, lr, momentum: float = 0.9,
+             weight_decay: float = 0.0, nesterov: bool = False):
+    """One SGD+momentum update. ``lr`` may be a scalar or callable(step)."""
+    lr_t = lr(state.step) if callable(lr) else lr
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    buf = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+    upd = (
+        jax.tree.map(lambda g, m: g + momentum * m, grads, buf)
+        if nesterov
+        else buf
+    )
+    new_params = jax.tree.map(lambda p, u: p - lr_t * u, params, upd)
+    return new_params, SGDState(momentum=buf, step=state.step + 1)

@@ -1,0 +1,1 @@
+from .specs import param_specs, batch_specs, pod_stacked_specs, cache_specs  # noqa: F401

@@ -1,0 +1,44 @@
+"""Activation-sharding constraints (MaxText-style logical hints).
+
+GSPMD propagates input shardings through most of the program, but
+propagation dies inside `while` bodies fed by reshapes (the chunked-CE
+scan replicated a (B, chunk, V) fp32 tensor — 200 GiB — before these
+hints existed).  Model code calls ``constrain_batch`` at the few places
+that matter (embedding output, pre-loss hidden, per-chunk logits); the
+step builders activate the context with the mesh + batch axes of the
+current program.  Outside a context the calls are no-ops, so unit tests
+and the CPU simulation engine never see a mesh requirement.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "batch": None, "model": None}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes, model_axis="model"):
+    old = dict(_STATE)
+    _STATE.update(mesh=mesh, batch=batch_axes, model=model_axis)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def constrain_batch(x, *, vocab_dim: bool = False):
+    """Pin leading dim to the batch axes; optionally the last dim to the
+    model axis (vocab-parallel logits)."""
+    if _STATE["mesh"] is None or x.ndim == 0:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _STATE["batch"]
+    if vocab_dim and x.ndim >= 2:
+        size = _STATE["mesh"].shape[_STATE["model"]]
+        if x.shape[-1] % size == 0:
+            spec[-1] = _STATE["model"]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_STATE["mesh"], P(*spec)))

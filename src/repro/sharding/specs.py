@@ -1,0 +1,207 @@
+"""Sharding rules: param-tree path → PartitionSpec.
+
+Three modes, selectable per run (and hillclimbed in EXPERIMENTS §Perf):
+
+* ``fsdp`` (baseline) — every ≥2-D parameter is sharded over the
+  ``model`` axis on its largest divisible dim and over ``data`` on the
+  next largest divisible dim (ZeRO-3 style; XLA inserts per-layer
+  all-gathers under the scan).  Robust for any architecture, memory-
+  optimal, collective-heavy at decode.
+* ``tp`` — Megatron-style named rules: attention heads / FFN hidden /
+  MoE experts over ``model``; params *replicated* over ``data``.
+  Weight-collective-free at decode (the right regime for serve_step).
+* ``fsdp_tp`` — named ``model`` rules + ``data`` sharding on the
+  largest remaining divisible dim (hybrid; train regime).
+
+The leading layer axis of scanned stacks is never sharded (a sharded
+scan axis would reshard every layer iteration).
+
+GQA caveat: when num_kv_heads < |model|, wk/wv fall back to replicated
+output dims (phi3 kv=10, paligemma kv=1) — recorded per-arch in the
+roofline table.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+# parameter leaves that live under these names form the scanned stacks
+_STACKED_CONTAINERS = ("layers",)
+
+# TP named rules: leaf name → (model-sharded dim, kind)
+#   dim index is *within the logical param shape* (after any layer axis)
+_TP_RULES = {
+    # attention: shard head (output) dim of qkv, input dim of wo
+    "wq": 1, "wk": 1, "wv": 1, "wo": 0,
+    # dense mlp: hidden dim
+    "w_gate": 1, "w_up": 1, "w_down": 0,
+    # embeddings: vocab dim
+    "embed": 0, "lm_head": 1,
+    # ssm: inner dim
+    "in_proj": 1, "out_proj": 0,
+}
+# under "moe", experts are stacked: (E, d, f) — shard E (expert parallel)
+_TP_MOE_DIM = 0
+
+
+def _path_names(path):
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return names
+
+
+def _divisible(shape, dim, size):
+    return dim < len(shape) and shape[dim] % size == 0 and shape[dim] >= size
+
+
+def _fsdp_spec(shape, skip, data, model, data_size, model_size):
+    """Largest-divisible-dims rule; `skip` dims stay unsharded."""
+    spec = [None] * len(shape)
+    order = sorted((d for d in range(len(shape)) if d not in skip),
+                   key=lambda d: -shape[d])
+    for d in order:
+        if model and spec[d] is None and shape[d] % model_size == 0 \
+                and shape[d] >= model_size:
+            spec[d] = model
+            model = None
+        elif data and spec[d] is None and shape[d] % data_size == 0 \
+                and shape[d] >= data_size:
+            spec[d] = data
+            data = None
+    return spec
+
+
+def param_specs(params_shape, mesh, *, mode="fsdp", data_axis="data",
+                model_axis="model", pod_axis=None):
+    """PartitionSpec pytree matching `params_shape` (shapes or arrays)."""
+    data_size = mesh.shape[data_axis]
+    model_size = mesh.shape[model_axis]
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        if not shape or all(s == 1 for s in shape):
+            return P()
+        stacked = any(c in names for c in _STACKED_CONTAINERS)
+        off = 1 if stacked else 0
+        skip = set(range(off))
+        is_moe = "moe" in names
+        name = names[-1] if names else ""
+        if len(shape) - off < 2 and name not in ("embed", "lm_head"):
+            return P()  # norms / small vectors: replicate
+
+        if name in ("embed", "lm_head"):
+            # Output-dim rule (§Perf hillclimb #3): shard the embedding
+            # on d (gather stays local — vocab-sharded gathers forced a
+            # GSPMD replicate-reshard under the pod-stacked layout) and
+            # the head on vocab (Megatron vocab-parallel CE).  The
+            # contraction/lookup dims stay unsharded in every mode.
+            spec = [None] * len(shape)
+            mdim = len(shape) - 1 if name == "embed" else len(shape) - 1
+            if name == "embed":
+                if _divisible(shape, len(shape) - 1, model_size):
+                    spec[-1] = model_axis
+            else:  # lm_head (d, V): vocab-parallel
+                if _divisible(shape, len(shape) - 1, model_size):
+                    spec[-1] = model_axis
+            return P(*spec)
+
+        if mode == "fsdp":
+            spec = _fsdp_spec(shape, skip, data_axis, model_axis,
+                              data_size, model_size)
+            return P(*spec)
+
+        # named model rules (tp / fsdp_tp)
+        spec = [None] * len(shape)
+        mdim = None
+        if is_moe and name in ("w_gate", "w_up", "w_down"):
+            # Output-dim-only sharding (§Perf hillclimb #2 conclusion):
+            # gate/up (E,d,f) shard f; down (E,f,d) shard d — the LAST
+            # dim in both cases, never a contraction dim, so no
+            # partial-sum all-reduces of capacity buffers.  The data
+            # axis ZeRO-shards the expert dim E when divisible (weights
+            # all-gathered per layer, 1/|data| of the naive traffic).
+            # Expert-parallelism (mode "ep") and intra-expert
+            # row-parallel w_down both measured worse under GSPMD —
+            # see EXPERIMENTS §Perf for the refuted iterations.
+            if mode == "ep" and _divisible(shape, off + _TP_MOE_DIM,
+                                           model_size):
+                mdim = off + _TP_MOE_DIM
+            else:
+                mdim = len(shape) - 1
+            if mdim is not None and _divisible(shape, mdim, model_size):
+                spec[mdim] = model_axis
+            if mode in ("fsdp_tp", "ep") and spec[off] is None and \
+                    _divisible(shape, off, data_size):
+                spec[off] = data_axis
+            return P(*spec)
+        elif name in _TP_RULES:
+            mdim = off + _TP_RULES[name]
+        if mdim is not None and _divisible(shape, mdim, model_size):
+            spec[mdim] = model_axis
+        elif mdim is not None:
+            # fall back: try the other matmul dim (e.g. kv heads < |model|)
+            alt = off + (1 - _TP_RULES.get(name, 0)) if not is_moe else None
+            if alt is not None and _divisible(shape, alt, model_size):
+                spec[alt] = model_axis
+        if mode == "fsdp_tp":
+            taken = {d for d, s in enumerate(spec) if s} | skip
+            order = sorted((d for d in range(len(shape)) if d not in taken),
+                           key=lambda d: -shape[d])
+            for d in order:
+                if shape[d] % data_size == 0 and shape[d] >= data_size:
+                    spec[d] = data_axis
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def pod_stacked_specs(specs, pod_axis="pod"):
+    """Prefix every spec with the pod axis (client-stacked state)."""
+    return jax.tree.map(lambda s: P(pod_axis, *s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_shape, *, batch_axes):
+    """Shard the leading (batch) dim of every input leaf; rest replicated.
+
+    batch_axes: axis name or tuple of axis names (e.g. ("pod", "data")).
+    Leaves whose leading dim does not divide are replicated.
+    """
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        return P(batch_axes, *([None] * (len(shape) - 1))) if shape else P()
+
+    return jax.tree.map(leaf_spec, batch_shape)
+
+
+def cache_specs(cache_shape, mesh, *, batch_axes, model_axis="model"):
+    """KV/SSM cache sharding: batch dim over `batch_axes`, head dim over
+    `model` when divisible.  Cache layout: leading layer axis, then
+    batch.  Scalars (pos) replicated."""
+    sizes = np.prod([mesh.shape[a] for a in (
+        batch_axes if isinstance(batch_axes, tuple) else (batch_axes,))])
+    model_size = mesh.shape[model_axis]
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) <= 1:
+            return P()
+        # (L, B, ...) — shard B if divisible, plus a heads-like dim
+        spec = [None] * len(shape)
+        if shape[1] % sizes == 0 and shape[1] >= sizes:
+            spec[1] = batch_axes
+        for d in range(2, len(shape)):
+            if shape[d] % model_size == 0 and shape[d] >= model_size:
+                spec[d] = model_axis
+                break
+        return P(*spec)
+
+    return jax.tree.map(leaf_spec, cache_shape)

@@ -1,0 +1,102 @@
+"""HLO-text analysis: collective inventory for the roofline.
+
+`cost_analysis()` does not expose collective traffic, so we parse the
+compiled (post-SPMD) HLO.  Shapes in the compiled module are already
+per-device, so summed operand bytes are per-chip quantities — exactly
+what the roofline's collective term wants.
+
+Ring-algorithm byte multipliers (bytes actually serialized on links,
+per device, group size n):
+    all-gather       result_bytes · (n−1)/n
+    reduce-scatter   operand_bytes · (n−1)/n
+    all-reduce       2 · operand_bytes · (n−1)/n   (RS + AG)
+    all-to-all       operand_bytes · (n−1)/n
+    collective-permute  operand_bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\b(.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*(?:,|$)")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_SHAPE_RE.search(rest)
+    if m:  # replica_groups=[G,S]<=[...] form: G groups of size S
+        return int(m.group(2))
+    m = _GROUPS_RE.search(rest)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        if ids:
+            return len(ids)
+    return default
+
+
+def collective_inventory(hlo_text: str, *, world_size: int):
+    """Per-op-kind collective byte totals (per device).
+
+    Returns dict kind → {"count": int, "bytes": payload-on-link bytes,
+    "raw_bytes": tensor bytes}.
+    """
+    inv = defaultdict(lambda: {"count": 0, "bytes": 0.0, "raw_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind, rest = m.groups()
+        kind = kind.replace("-start", "")
+        size = _shape_bytes(shape_str)
+        n = _group_size(rest, world_size)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            moved = 2.0 * size * frac
+        elif kind == "all-gather":
+            moved = size * frac
+        elif kind == "reduce-scatter":
+            moved = size * frac
+        elif kind == "all-to-all":
+            moved = size * frac
+        else:  # collective-permute
+            moved = float(size)
+        inv[kind]["count"] += 1
+        inv[kind]["bytes"] += moved
+        inv[kind]["raw_bytes"] += float(size)
+    return dict(inv)
+
+
+def total_collective_bytes(hlo_text: str, *, world_size: int) -> float:
+    inv = collective_inventory(hlo_text, world_size=world_size)
+    return sum(v["bytes"] for v in inv.values())
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    """Number of <opname>(...) call sites (not name mentions)."""
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

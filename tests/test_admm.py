@@ -1,0 +1,169 @@
+"""ADMM engine correctness on analytically-solvable problems.
+
+Per-client least squares f_i(θ) = (1/2 n_i)‖A_i θ − b_i‖² gives a
+closed-form global minimizer of Σ_i f_i — the engine must converge to it
+(Theorem 5 is about stationary points; for strongly convex quadratics
+the stationary point is unique and global).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ControllerConfig,
+    FLConfig,
+    init_state,
+    make_round_fn,
+)
+
+D = 5
+N_CLIENTS = 4
+N_POINTS = 8
+
+
+def _quadratic_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(N_CLIENTS, N_POINTS, D)).astype(np.float32)
+    # heterogeneous targets → genuinely different local minimizers
+    theta_true = rng.normal(size=(N_CLIENTS, D)).astype(np.float32)
+    b = np.einsum("npd,nd->np", A, theta_true) + 0.05 * rng.normal(
+        size=(N_CLIENTS, N_POINTS)).astype(np.float32)
+    # global minimizer of Σ_i (1/2 n_i)‖A_i θ − b_i‖²
+    H = sum(A[i].T @ A[i] / N_POINTS for i in range(N_CLIENTS))
+    g = sum(A[i].T @ b[i] / N_POINTS for i in range(N_CLIENTS))
+    theta_star = np.linalg.solve(H, g)
+    data = {"x": jnp.asarray(A), "y": jnp.asarray(b)}
+    return data, theta_star
+
+
+
+
+def ls_loss(params, x, y):
+    r = x @ params["theta"] - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def _run(alg, data, *, rounds, participation=1.0, rho=1.0, lr=0.15,
+         epochs=40, seed=0, controller=None, warm_start=True, mu=0.0):
+    cfg = FLConfig(
+        algorithm=alg, n_clients=N_CLIENTS, participation=participation,
+        rho=rho, mu=mu, lr=lr, momentum=0.0, epochs=epochs,
+        batch_size=N_POINTS, seed=seed, warm_start=warm_start,
+        controller=controller or ControllerConfig(K=0.05, alpha=0.9))
+    params0 = {"theta": jnp.zeros((D,), jnp.float32)}
+    state = init_state(cfg, params0)
+    round_fn = make_round_fn(cfg, ls_loss, data)
+    evs = []
+    for _ in range(rounds):
+        state, m = round_fn(state)
+        evs.append(int(m.num_events))
+    return state, evs
+
+
+class TestVanillaADMM:
+    def test_converges_to_global_minimizer(self):
+        data, theta_star = _quadratic_problem()
+        state, _ = _run("admm", data, rounds=40)
+        got = np.asarray(state.omega["theta"])
+        np.testing.assert_allclose(got, theta_star, atol=2e-2)
+
+    def test_duals_sum_to_near_zero(self):
+        """At consensus Σλ_i ⊥ residuals; ω-update keeps mean λ ≈ 0."""
+        data, _ = _quadratic_problem()
+        state, _ = _run("admm", data, rounds=40)
+        lam_mean = np.asarray(jnp.mean(state.lam["theta"], 0))
+        # z-average construction: ω = mean(θ)+mean(λ); consensus θ_i→ω
+        assert np.linalg.norm(lam_mean) < 0.5
+
+    def test_full_participation_every_round(self):
+        data, _ = _quadratic_problem()
+        _, evs = _run("admm", data, rounds=10)
+        assert all(e == N_CLIENTS for e in evs)
+
+
+class TestFedBackReducesToADMM:
+    def test_delta_zero_gain_zero_matches_vanilla(self):
+        """K=0, δ⁰=0 ⇒ every trigger fires (distance ≥ 0) ⇒ vanilla ADMM."""
+        data, _ = _quadratic_problem()
+        ctrl = ControllerConfig(K=0.0, alpha=0.9, delta0=0.0)
+        s_fb, ev_fb = _run("fedback", data, rounds=15, controller=ctrl)
+        s_admm, ev_admm = _run("admm", data, rounds=15)
+        assert ev_fb == ev_admm == [N_CLIENTS] * 15
+        np.testing.assert_allclose(
+            np.asarray(s_fb.omega["theta"]),
+            np.asarray(s_admm.omega["theta"]), rtol=1e-5, atol=1e-6)
+
+
+class TestFedBackQuadratic:
+    def test_converges_with_partial_participation(self):
+        data, theta_star = _quadratic_problem()
+        ctrl = ControllerConfig(K=0.2, alpha=0.9)
+        state, evs = _run("fedback", data, rounds=150, participation=0.5,
+                          rho=1.0, controller=ctrl)
+        got = np.asarray(state.omega["theta"])
+        np.testing.assert_allclose(got, theta_star, atol=5e-2)
+        rate = sum(evs) / (150 * N_CLIENTS)
+        assert abs(rate - 0.5) < 0.1, rate
+
+    def test_fedadmm_random_also_converges(self):
+        data, theta_star = _quadratic_problem()
+        state, evs = _run("fedadmm", data, rounds=150, participation=0.5)
+        np.testing.assert_allclose(np.asarray(state.omega["theta"]),
+                                   theta_star, atol=5e-2)
+        assert all(e == 2 for e in evs)  # exactly ⌊0.5·4⌋ random clients
+
+
+class TestAvgFamily:
+    def test_fedavg_converges_on_iid_quadratic(self):
+        # identical clients → FedAvg's fixed point is the true minimizer
+        rng = np.random.default_rng(1)
+        A0 = rng.normal(size=(N_POINTS, D)).astype(np.float32)
+        theta_true = rng.normal(size=(D,)).astype(np.float32)
+        b0 = (A0 @ theta_true).astype(np.float32)
+        data = {"x": jnp.asarray(np.stack([A0] * N_CLIENTS)),
+                "y": jnp.asarray(np.stack([b0] * N_CLIENTS))}
+        state, _ = _run("fedavg", data, rounds=30, rho=0.0)
+        np.testing.assert_allclose(np.asarray(state.omega["theta"]),
+                                   theta_true, atol=2e-2)
+
+    def test_fedprox_prox_term_limits_drift(self):
+        data, _ = _quadratic_problem()
+        s_prox, _ = _run("fedprox", data, rounds=1, mu=5.0, epochs=40)
+        s_avg, _ = _run("fedavg", data, rounds=1, epochs=40)
+        w0 = np.zeros(D, np.float32)
+        d_prox = np.linalg.norm(np.asarray(s_prox.omega["theta"]) - w0)
+        d_avg = np.linalg.norm(np.asarray(s_avg.omega["theta"]) - w0)
+        assert d_prox < d_avg  # μ‖θ−ω‖² anchors locals to the server
+
+
+class TestEngineMechanics:
+    def test_non_participants_keep_state(self):
+        data, _ = _quadratic_problem()
+        cfg = FLConfig(algorithm="fedadmm", n_clients=N_CLIENTS,
+                       participation=0.25, rho=1.0, lr=0.1, momentum=0.0,
+                       epochs=2, batch_size=N_POINTS, seed=3)
+        params0 = {"theta": jnp.zeros((D,), jnp.float32)}
+        state = init_state(cfg, params0)
+        round_fn = make_round_fn(cfg, ls_loss, data)
+        prev_theta = np.asarray(state.theta["theta"])
+        state2, m = round_fn(state)
+        ev = np.asarray(m.events)
+        new_theta = np.asarray(state2.theta["theta"])
+        for i in range(N_CLIENTS):
+            if not ev[i]:
+                np.testing.assert_array_equal(new_theta[i], prev_theta[i])
+            else:
+                assert not np.allclose(new_theta[i], prev_theta[i])
+
+    def test_round_zero_full_participation_under_fedback(self):
+        """δ⁰=0 and z_i^prev=θ⁰=ω⁰ ⇒ distance 0 ≥ 0 fires everyone."""
+        data, _ = _quadratic_problem()
+        cfg = FLConfig(algorithm="fedback", n_clients=N_CLIENTS,
+                       participation=0.25, rho=1.0, lr=0.1, epochs=2,
+                       batch_size=N_POINTS)
+        params0 = {"theta": jnp.zeros((D,), jnp.float32)}
+        state = init_state(cfg, params0)
+        round_fn = make_round_fn(cfg, ls_loss, data)
+        _, m = round_fn(state)
+        assert int(m.num_events) == N_CLIENTS

@@ -1,0 +1,114 @@
+"""Baseline presets, selection strategies and the SCAFFOLD engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, FLConfig, init_state
+from repro.core.baselines import (
+    baseline_config,
+    init_scaffold,
+    make_scaffold_round,
+)
+from repro.core.selection import make_selection
+from repro.core.state import FLState
+
+
+class TestPresets:
+    def test_known_presets(self):
+        for name in ("fedback", "fedadmm", "admm", "fedavg", "fedprox"):
+            cfg = baseline_config(name, n_clients=8)
+            assert cfg.n_clients == 8
+
+    def test_admm_is_full_participation(self):
+        assert baseline_config("admm").participation == 1.0
+
+    def test_unknown_raises(self):
+        with pytest.raises(ValueError):
+            baseline_config("fedsgd")
+
+
+class TestSelectionStrategies:
+    def _state(self, n=10):
+        cfg = FLConfig(n_clients=n)
+        return init_state(cfg, {"w": jnp.zeros((3,))})
+
+    @pytest.mark.parametrize("name,rate,expected", [
+        ("random", 0.3, 3), ("round_robin", 0.2, 2), ("full", 0.9, 10),
+    ])
+    def test_cardinality(self, name, rate, expected):
+        sel = make_selection(name, rate=rate,
+                             controller=ControllerConfig(target_rate=rate))
+        state = self._state()
+        ev, _ = sel(jax.random.PRNGKey(0), state, jnp.zeros((10,)))
+        assert int(ev.sum()) == expected
+
+    def test_round_robin_cycles_through_all(self):
+        sel = make_selection("round_robin", rate=0.2,
+                             controller=ControllerConfig())
+        state = self._state()
+        seen = np.zeros(10, bool)
+        for k in range(5):
+            ev, ctrl = sel(jax.random.PRNGKey(k), state, jnp.zeros((10,)))
+            seen |= np.asarray(ev)
+            state = FLState(state.theta, state.lam, state.z_prev,
+                            state.omega, ctrl, state.rng, state.round + 1)
+        assert seen.all()
+
+    def test_random_is_permutation_based_exact(self):
+        sel = make_selection("random", rate=0.5,
+                             controller=ControllerConfig())
+        state = self._state()
+        for k in range(5):
+            ev, _ = sel(jax.random.PRNGKey(k), state, jnp.zeros((10,)))
+            assert int(ev.sum()) == 5
+
+
+class TestScaffold:
+    def test_converges_on_iid_quadratic(self):
+        rng = np.random.default_rng(0)
+        D, NP, N = 4, 8, 4
+        A = rng.normal(size=(NP, D)).astype(np.float32)
+        theta_true = rng.normal(size=(D,)).astype(np.float32)
+        b = (A @ theta_true).astype(np.float32)
+        data = {"x": jnp.asarray(np.stack([A] * N)),
+                "y": jnp.asarray(np.stack([b] * N))}
+
+        def ls_loss(params, x, y):
+            r = x @ params["theta"] - y
+            return 0.5 * jnp.mean(r * r)
+
+        cfg = FLConfig(algorithm="fedavg", n_clients=N, participation=0.5,
+                       lr=0.1, momentum=0.0, epochs=20, batch_size=NP)
+        state = init_scaffold(cfg, {"theta": jnp.zeros((D,), jnp.float32)})
+        round_fn = make_scaffold_round(cfg, ls_loss, data)
+        for _ in range(40):
+            state, m = round_fn(state)
+        np.testing.assert_allclose(np.asarray(state.omega["theta"]),
+                                   theta_true, atol=5e-2)
+
+    def test_control_variates_update_only_for_participants(self):
+        rng = np.random.default_rng(1)
+        D, NP, N = 3, 6, 4
+        data = {"x": jnp.asarray(rng.normal(size=(N, NP, D)),
+                                 jnp.float32),
+                "y": jnp.asarray(rng.normal(size=(N, NP)), jnp.float32)}
+
+        def ls_loss(params, x, y):
+            r = x @ params["theta"] - y
+            return 0.5 * jnp.mean(r * r)
+
+        cfg = FLConfig(algorithm="fedavg", n_clients=N, participation=0.25,
+                       lr=0.05, momentum=0.0, epochs=4, batch_size=NP,
+                       seed=7)
+        state = init_scaffold(cfg, {"theta": jnp.zeros((D,), jnp.float32)})
+        round_fn = make_scaffold_round(cfg, ls_loss, data)
+        prev = np.asarray(state.c_clients["theta"])
+        state2, m = round_fn(state)
+        ev = np.asarray(m["events"])
+        new = np.asarray(state2.c_clients["theta"])
+        for i in range(N):
+            if ev[i]:
+                assert not np.allclose(new[i], prev[i])
+            else:
+                np.testing.assert_array_equal(new[i], prev[i])

@@ -1,0 +1,41 @@
+"""Checkpoint store round-trips full federated state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
+from repro.core import ControllerConfig, FLConfig, init_state
+from repro.models.mlp import init_mlp
+
+
+def _state():
+    cfg = FLConfig(algorithm="fedback", n_clients=5, participation=0.2)
+    return cfg, init_state(cfg, init_mlp(jax.random.PRNGKey(0), 16, 8, 4))
+
+
+class TestStore:
+    def test_roundtrip_flstate(self, tmp_path):
+        cfg, state = _state()
+        path = save_checkpoint(str(tmp_path), 3, state)
+        restored = load_checkpoint(path, state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_discovery(self, tmp_path):
+        cfg, state = _state()
+        save_checkpoint(str(tmp_path), 1, state)
+        p5 = save_checkpoint(str(tmp_path), 5, state)
+        save_checkpoint(str(tmp_path), 2, state)
+        assert latest_checkpoint(str(tmp_path)) == p5
+
+    def test_missing_dir(self):
+        assert latest_checkpoint("/nonexistent/dir") is None
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        cfg, state = _state()
+        path = save_checkpoint(str(tmp_path), 0, state)
+        bad = jax.tree.map(lambda x: x, state)._replace(
+            omega=init_mlp(jax.random.PRNGKey(1), 16, 9, 4))
+        with pytest.raises(ValueError):
+            load_checkpoint(path, bad)

@@ -1,0 +1,169 @@
+"""Unit + property tests for the participation controller.
+
+Validates the paper's theory numerically:
+* Lemma 1  — δ_i^k stays inside the stated bounds for *any* bounded
+  trigger process (hypothesis sweeps gains and adversarial distances).
+* Theorem 2 — the time-averaged participation rate tracks L̄ at O(1/T)
+  with the stated constants c1, c2.
+* Lemma 4  — no client starves (events keep occurring indefinitely).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controller import (
+    ControllerConfig,
+    controller_step,
+    delta_bounds,
+    init_controller,
+    realized_rate,
+    tracking_error_bounds,
+)
+from repro.core.trigger import evaluate_trigger
+
+
+def _run_closed_loop(cfg, distances, n_clients=1):
+    """Drive the closed loop with an exogenous distance process.
+
+    distances: (T, N) — plays the role of ‖ω^k − z_i^prev‖ (bounded).
+    Returns (events (T, N), deltas (T, N), final state).
+    """
+    state = init_controller(n_clients, cfg)
+
+    def step(state, dist):
+        ev = evaluate_trigger(dist, state.delta)
+        new = controller_step(state, ev, cfg)
+        return new, (ev, new.delta)
+
+    state, (events, deltas) = jax.lax.scan(step, state, distances)
+    return np.asarray(events), np.asarray(deltas), state
+
+
+class TestLemma1Bounds:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        K=st.floats(0.05, 10.0),
+        alpha=st.floats(0.05, 0.99),
+        target=st.floats(0.01, 1.0),
+        delta0=st.floats(-5.0, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_delta_bounded_for_any_bounded_distance_process(
+            self, K, alpha, target, delta0, seed):
+        cfg = ControllerConfig(K=K, alpha=alpha, target_rate=target,
+                               delta0=delta0)
+        rng = np.random.default_rng(seed)
+        dist_max = 3.0
+        dists = jnp.asarray(
+            rng.uniform(0.0, dist_max, size=(400, 1)), jnp.float32)
+        _, deltas, _ = _run_closed_loop(cfg, dists)
+        # Any δ₊ > dist_max saturates the trigger (S(δ)=0 ∀δ≥δ₊).
+        lo, hi = delta_bounds(cfg, dist_max + 1e-6)
+        tol = 1e-4 * max(1.0, abs(lo), abs(hi))
+        assert deltas.min() >= lo - tol, (deltas.min(), lo)
+        assert deltas.max() <= hi + tol, (deltas.max(), hi)
+
+    def test_paper_gains_mnist(self):
+        # The paper's MNIST gains: K=2, α=0.9, L̄ ∈ {.05,…,.6}.
+        for target in (0.05, 0.1, 0.2, 0.4, 0.6):
+            cfg = ControllerConfig(K=2.0, alpha=0.9, target_rate=target)
+            rng = np.random.default_rng(0)
+            dists = jnp.asarray(rng.uniform(0, 5.0, (2000, 1)), jnp.float32)
+            _, deltas, _ = _run_closed_loop(cfg, dists)
+            lo, hi = delta_bounds(cfg, 5.0 + 1e-6)
+            assert lo <= deltas.min() and deltas.max() <= hi
+
+
+class TestTheorem2Tracking:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        K=st.floats(0.1, 5.0),
+        alpha=st.floats(0.2, 0.95),
+        target=st.floats(0.05, 0.95),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_rate_tracks_target_with_thm2_constants(self, K, alpha, target,
+                                                    seed):
+        cfg = ControllerConfig(K=K, alpha=alpha, target_rate=target)
+        rng = np.random.default_rng(seed)
+        T = 3000
+        dist_max = 2.0
+        dists = jnp.asarray(rng.uniform(0, dist_max, (T, 1)), jnp.float32)
+        events, _, state = _run_closed_loop(cfg, dists)
+        rate = events.mean()
+        lo, hi = tracking_error_bounds(cfg, dist_max + 1e-6, T)
+        assert lo - 1e-6 <= rate - target <= hi + 1e-6, (
+            rate, target, lo, hi)
+
+    def test_rate_converges_at_one_over_t(self):
+        """err(T) ≤ c/T: doubling the horizon halves the error envelope."""
+        cfg = ControllerConfig(K=1.0, alpha=0.9, target_rate=0.3)
+        rng = np.random.default_rng(7)
+        errs = []
+        for T in (500, 1000, 2000, 4000):
+            dists = jnp.asarray(rng.uniform(0, 1.0, (T, 1)), jnp.float32)
+            events, _, _ = _run_closed_loop(cfg, dists)
+            errs.append(abs(events.mean() - 0.3))
+        # envelope: err_T * T bounded by a constant
+        scaled = [e * T for e, T in zip(errs, (500, 1000, 2000, 4000))]
+        assert max(scaled) <= max(
+            tracking_error_bounds(cfg, 1.0, 1)[1],
+            -tracking_error_bounds(cfg, 1.0, 1)[0])
+
+    def test_heterogeneous_targets(self):
+        """L̄_i may differ between clients (paper §3)."""
+        targets = jnp.asarray([0.05, 0.2, 0.5, 0.8], jnp.float32)
+        cfg = ControllerConfig(K=1.0, alpha=0.9, target_rate=targets)
+        rng = np.random.default_rng(3)
+        dists = jnp.asarray(rng.uniform(0, 1.0, (4000, 4)), jnp.float32)
+        events, _, state = _run_closed_loop(cfg, dists, n_clients=4)
+        np.testing.assert_allclose(events.mean(0), np.asarray(targets),
+                                   atol=0.02)
+
+
+class TestLemma4NoStarvation:
+    def test_events_never_stop(self):
+        cfg = ControllerConfig(K=0.5, alpha=0.9, target_rate=0.1)
+        rng = np.random.default_rng(11)
+        dists = jnp.asarray(rng.uniform(0.5, 1.0, (5000, 1)), jnp.float32)
+        events, _, _ = _run_closed_loop(cfg, dists)
+        # every length-200 tail window contains at least one event
+        for s in range(2000, 4800, 200):
+            assert events[s:s + 200].any(), f"starved in window {s}"
+
+
+class TestControllerMechanics:
+    def test_low_pass_filter_stays_in_unit_interval(self):
+        cfg = ControllerConfig(K=1.0, alpha=0.7, target_rate=0.5)
+        state = init_controller(3, cfg)
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            ev = jnp.asarray(rng.integers(0, 2, 3), bool)
+            state = controller_step(state, ev, cfg)
+            assert (state.load >= 0).all() and (state.load <= 1).all()
+
+    def test_full_participation_drives_delta_up(self):
+        cfg = ControllerConfig(K=1.0, alpha=0.9, target_rate=0.1)
+        state = init_controller(1, cfg)
+        for _ in range(50):
+            state = controller_step(state, jnp.ones((1,), bool), cfg)
+        assert float(state.delta[0]) > 0  # raises threshold to choke events
+
+    def test_silence_drives_delta_down(self):
+        cfg = ControllerConfig(K=1.0, alpha=0.9, target_rate=0.5)
+        state = init_controller(1, cfg)
+        for _ in range(50):
+            state = controller_step(state, jnp.zeros((1,), bool), cfg)
+        # negative δ means the trigger fires unconditionally (distance ≥ 0)
+        assert float(state.delta[0]) < 0
+
+    def test_realized_rate_counts(self):
+        cfg = ControllerConfig()
+        state = init_controller(2, cfg)
+        pattern = [(True, False), (True, True), (False, False), (True, False)]
+        for ev in pattern:
+            state = controller_step(state, jnp.asarray(ev), cfg)
+        np.testing.assert_allclose(np.asarray(realized_rate(state)),
+                                   [0.75, 0.25])

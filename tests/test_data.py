@@ -1,0 +1,92 @@
+"""Data pipeline: synthetic sets, non-iid partitioners, determinism."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    federated_arrays,
+    make_synthetic_cifar,
+    make_synthetic_mnist,
+)
+from repro.data.partition import (
+    label_histogram,
+    partition_dirichlet,
+    partition_label_shard,
+)
+
+
+class TestSynthetic:
+    def test_mnist_shapes_and_ranges(self):
+        ds = make_synthetic_mnist(n_train=2000, n_test=400)
+        assert ds.x_train.shape == (2000, 784)
+        assert ds.x_test.shape == (400, 784)
+        assert ds.x_train.min() >= 0.0 and ds.x_train.max() <= 1.0
+        assert set(np.unique(ds.y_train)) <= set(range(10))
+
+    def test_cifar_shapes_and_ranges(self):
+        ds = make_synthetic_cifar(n_train=1000, n_test=200)
+        assert ds.x_train.shape == (1000, 3072)
+        assert ds.x_train.min() >= -1.0 and ds.x_train.max() <= 1.0
+
+    def test_deterministic(self):
+        a = make_synthetic_mnist(n_train=500, n_test=100)
+        b = make_synthetic_mnist(n_train=500, n_test=100)
+        np.testing.assert_array_equal(a.x_train, b.x_train)
+        np.testing.assert_array_equal(a.y_train, b.y_train)
+
+    def test_all_classes_present(self):
+        ds = make_synthetic_mnist(n_train=2000, n_test=400)
+        assert len(np.unique(ds.y_train)) == 10
+
+
+class TestLabelShard:
+    def test_each_client_has_at_most_two_classes(self):
+        ds = make_synthetic_mnist(n_train=4000, n_test=100)
+        xs, ys = partition_label_shard(ds.x_train, ds.y_train, n_clients=20,
+                                       classes_per_client=2, seed=0)
+        hist = label_histogram(ys, 10)
+        assert ((hist > 0).sum(axis=1) <= 2).all()
+
+    def test_equal_shard_sizes(self):
+        ds = make_synthetic_mnist(n_train=4000, n_test=100)
+        xs, ys = partition_label_shard(ds.x_train, ds.y_train, n_clients=20)
+        assert xs.shape[0] == 20 and xs.shape[1] == ys.shape[1]
+
+    @settings(max_examples=10, deadline=None)
+    @given(n_clients=st.sampled_from([5, 10, 20, 25]),
+           cpc=st.sampled_from([1, 2, 4]))
+    def test_property_class_restriction(self, n_clients, cpc):
+        ds = make_synthetic_mnist(n_train=3000, n_test=100)
+        xs, ys = partition_label_shard(
+            ds.x_train, ds.y_train, n_clients=n_clients,
+            classes_per_client=cpc, seed=1)
+        hist = label_histogram(ys, 10)
+        assert ((hist > 0).sum(axis=1) <= cpc).all()
+
+
+class TestDirichlet:
+    def test_nontrivial_heterogeneity(self):
+        ds = make_synthetic_cifar(n_train=4000, n_test=100)
+        xs, ys = partition_dirichlet(ds.x_train, ds.y_train, n_clients=20,
+                                     beta=0.5, seed=0)
+        hist = label_histogram(ys, 10).astype(float)
+        p = hist / hist.sum(1, keepdims=True)
+        # client label distributions differ strongly from the global one
+        kl = (p * np.log((p + 1e-9) / 0.1)).sum(1)
+        assert kl.mean() > 0.2
+
+    def test_min_points_respected(self):
+        ds = make_synthetic_cifar(n_train=4000, n_test=100)
+        xs, ys = partition_dirichlet(ds.x_train, ds.y_train, n_clients=10,
+                                     beta=0.5, seed=2, min_points=8)
+        assert ys.shape[1] >= 8
+
+
+class TestFederatedArrays:
+    @pytest.mark.parametrize("scheme", ["label_shard", "dirichlet", "iid"])
+    def test_schemes(self, scheme):
+        ds = make_synthetic_mnist(n_train=2000, n_test=200)
+        data, test = federated_arrays(ds, n_clients=10, scheme=scheme)
+        assert data["x"].shape[0] == 10
+        assert data["x"].shape[:2] == data["y"].shape
+        assert test["x"].shape[0] == 200

@@ -1,0 +1,63 @@
+"""HLO collective-parsing unit tests (synthetic HLO snippets + a real
+compiled module)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils.hlo import (
+    collective_inventory,
+    count_op,
+    total_collective_bytes,
+)
+
+SNIPPET = """
+  %all-reduce.5 = f32[128,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.2 = bf16[64,2048]{1,0} all-gather(%y), replica_groups=[2,4]<=[8], dimensions={1}
+  %reduce-scatter.1 = f32[32]{0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+  %tuple.1 = (f32[8]{0}, f32[8]{0}) all-to-all(%a, %b), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = f32[16,16]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+
+
+class TestParsing:
+    def test_inventory_kinds_and_counts(self):
+        inv = collective_inventory(SNIPPET, world_size=8)
+        assert inv["all-reduce"]["count"] == 1
+        assert inv["all-gather"]["count"] == 1
+        assert inv["reduce-scatter"]["count"] == 1
+        assert inv["all-to-all"]["count"] == 1
+        assert inv["collective-permute"]["count"] == 1
+
+    def test_ring_multipliers(self):
+        inv = collective_inventory(SNIPPET, world_size=8)
+        ar = 128 * 1024 * 4
+        assert inv["all-reduce"]["bytes"] == pytest.approx(
+            2 * ar * 3 / 4)  # group of 4
+        ag = 64 * 2048 * 2
+        assert inv["all-gather"]["bytes"] == pytest.approx(ag * 3 / 4)
+        cp = 16 * 16 * 4
+        assert inv["collective-permute"]["bytes"] == pytest.approx(cp)
+
+    def test_tuple_shapes_counted(self):
+        inv = collective_inventory(SNIPPET, world_size=8)
+        a2a = 2 * 8 * 4
+        assert inv["all-to-all"]["raw_bytes"] == pytest.approx(a2a)
+
+    def test_total(self):
+        t = total_collective_bytes(SNIPPET, world_size=8)
+        assert t > 0
+
+    def test_count_op(self):
+        assert count_op(SNIPPET, "all-gather") == 1
+
+
+class TestOnRealModule:
+    def test_matmul_allreduce_detected(self):
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        # single-device: no collectives expected
+        f = jax.jit(lambda x: (x @ x.T).sum())
+        hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
+        inv = collective_inventory(hlo, world_size=1)
+        assert sum(v["count"] for v in inv.values()) == 0

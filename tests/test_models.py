@@ -1,0 +1,200 @@
+"""Deep unit tests for model components (beyond the per-arch smoke)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import blockwise_attention
+from repro.models.layers import (
+    apply_rope,
+    chunked_lm_loss,
+    cross_entropy_logits,
+    rmsnorm,
+)
+from repro.models.moe import moe_apply, moe_init, moe_ref
+from repro.models.ssm import ssd_chunked, ssm_cache_init, ssm_decode_step, \
+    ssm_forward, ssm_init
+
+
+def _naive_attn(q, k, v, mode="causal", window=0, prefix_len=0):
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    qg = q.reshape(B, S, Kv, H // Kv, hd)
+    s = jnp.einsum("bskgh,btkh->bskgt", qg, k) / hd ** 0.5
+    qa = jnp.arange(S)[:, None]
+    ka = jnp.arange(S)[None, :]
+    ok = {"causal": ka <= qa, "bidir": jnp.ones((S, S), bool),
+          "prefix": (ka <= qa) | (ka < prefix_len)}[mode]
+    if window:
+        ok = ok & (ka > qa - window)
+    s = jnp.where(ok[None, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, -1)
+    return jnp.einsum("bskgt,btkh->bskgh", w, v).reshape(B, S, H, hd)
+
+
+class TestBlockwiseAttention:
+    @settings(max_examples=12, deadline=None)
+    @given(s=st.integers(4, 70), kvb=st.integers(3, 32),
+           mode=st.sampled_from(["causal", "bidir", "prefix"]),
+           window=st.sampled_from([0, 5]))
+    def test_property_matches_naive(self, s, kvb, mode, window):
+        rng = np.random.default_rng(s * 100 + kvb)
+        q = jnp.asarray(rng.normal(size=(1, s, 4, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+        pos = jnp.arange(s)
+        got = blockwise_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                                  mask_mode=mode, window=window,
+                                  prefix_len=3, kv_block=kvb)
+        want = _naive_attn(q, k, v, mode, window, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_unroll_matches_rolled(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(2, 32, 4, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 32, 2, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 32, 2, 8)), jnp.float32)
+        pos = jnp.arange(32)
+        a = blockwise_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                                kv_block=8, unroll=False)
+        b = blockwise_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                                kv_block=8, unroll=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestMoE:
+    def test_capacity_drops_bounded(self):
+        """With cf=1.0 the dropped fraction is bounded and out stays
+        finite even under adversarial (all-same-expert) routing."""
+        p = moe_init(jax.random.PRNGKey(0), 8, 16, 4, jnp.float32)
+        # force every token to expert 0: positive inputs × rigged router
+        p = dict(p)
+        p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+        x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (2, 16, 8))) \
+            + 0.1
+        out, aux = moe_apply(p, x, top_k=2, capacity_factor=1.0)
+        assert bool(jnp.isfinite(out).all())
+        # aux loss must flag the imbalance (≫ 1 = balanced value)
+        assert float(aux) > 1.5
+
+    @settings(max_examples=10, deadline=None)
+    @given(e=st.sampled_from([2, 4, 8]), k=st.integers(1, 2),
+           s=st.integers(2, 24), seed=st.integers(0, 50))
+    def test_property_no_drop_matches_dense(self, e, k, s, seed):
+        p = moe_init(jax.random.PRNGKey(seed), 8, 16, e, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, s, 8))
+        out, _ = moe_apply(p, x, top_k=k, capacity_factor=float(e))
+        ref = moe_ref(p, x, top_k=k)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_grad_flows_through_router(self):
+        p = moe_init(jax.random.PRNGKey(0), 8, 16, 4, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8))
+
+        def loss(p):
+            out, aux = moe_apply(p, x, top_k=2, capacity_factor=4.0)
+            return jnp.sum(out ** 2) + 0.01 * aux
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+class TestSSM:
+    def test_decode_matches_forward_token_by_token(self):
+        """Sequential decode must replay the chunked forward exactly."""
+        d, E, N, P, K = 16, 2, 8, 8, 4
+        p = ssm_init(jax.random.PRNGKey(0), d, expand=E, ssm_state=N,
+                     head_dim=P, conv_kernel=K, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d)) * 0.5
+        full = ssm_forward(p, x, expand=E, ssm_state=N, head_dim=P,
+                           conv_kernel=K, chunk=4)
+        cache = ssm_cache_init(2, d, expand=E, ssm_state=N, head_dim=P,
+                               conv_kernel=K, dtype=jnp.float32)
+        outs = []
+        for t in range(12):
+            y, cache = ssm_decode_step(p, x[:, t:t + 1], cache, expand=E,
+                                       ssm_state=N, head_dim=P,
+                                       conv_kernel=K)
+            outs.append(y)
+        step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.integers(3, 40), q=st.sampled_from([2, 4, 8]),
+           seed=st.integers(0, 20))
+    def test_property_chunked_equals_sequential(self, s, q, seed):
+        rng = np.random.default_rng(seed)
+        B, H, P, N = 1, 2, 4, 4
+        x = jnp.asarray(rng.normal(size=(B, s, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.4, (B, s, H)), jnp.float32)
+        a_log = jnp.asarray(rng.uniform(-1, 1, (H,)), jnp.float32)
+        bm = jnp.asarray(rng.normal(size=(B, s, N)), jnp.float32)
+        cm = jnp.asarray(rng.normal(size=(B, s, N)), jnp.float32)
+        y, h = ssd_chunked(x, dt, a_log, bm, cm, chunk=q)
+        # sequential oracle
+        a = -jnp.exp(a_log)
+        hs = jnp.zeros((B, H, P, N))
+        ys = []
+        for t in range(s):
+            at = jnp.exp(a * dt[:, t])
+            upd = (dt[:, t][..., None] * x[:, t])[..., None] * \
+                bm[:, t][:, None, None, :]
+            hs = hs * at[..., None, None] + upd
+            ys.append(jnp.einsum("bhpn,bn->bhp", hs, cm[:, t]))
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(jnp.stack(ys, 1)),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hs),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestLayers:
+    def test_chunked_loss_matches_full(self):
+        rng = np.random.default_rng(0)
+        h = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 30, (2, 16)), jnp.int32)
+        full = chunked_lm_loss(h, w, y, 0, valid_vocab=30)
+        chunked = chunked_lm_loss(h, w, y, 4, valid_vocab=30)
+        np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+    def test_vocab_padding_masked(self):
+        """Padded vocab columns must not change the loss."""
+        rng = np.random.default_rng(1)
+        h = jnp.asarray(rng.normal(size=(1, 8, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 20)), jnp.float32)
+        wp = jnp.concatenate([w, jnp.full((8, 12), 50.0)], axis=1)
+        y = jnp.asarray(rng.integers(0, 20, (1, 8)), jnp.int32)
+        a = cross_entropy_logits(h @ w, y)
+        b = cross_entropy_logits(h @ wp, y, valid_vocab=20)
+        np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+    def test_rope_preserves_norm_and_relative_phase(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 8))
+        pos = jnp.arange(6)[None]
+        y = apply_rope(x, pos)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+        # shift equivariance: <rope(q,i), rope(k,j)> depends on i-j only
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 8))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 8))
+        def dot(i, j):
+            qi = apply_rope(q, jnp.asarray([[i]]))
+            kj = apply_rope(k, jnp.asarray([[j]]))
+            return float(jnp.vdot(qi, kj))
+        np.testing.assert_allclose(dot(3, 5), dot(10, 12), rtol=1e-4)
+
+    def test_rmsnorm_scale_invariant_direction(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))
+        g = jnp.ones((8,))
+        a = rmsnorm(x, g)
+        b = rmsnorm(3.0 * x, g)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)

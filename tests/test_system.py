@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the FedBack system.
+
+These are the paper's claims executed at CI scale:
+  * FedBack converges on non-iid data and tracks L̄ (Thm. 2 / Tab. 2).
+  * Deterministic selection beats random selection on events-to-accuracy
+    (Tab. 1's direction, at reduced scale).
+  * The full algorithm family runs under one engine.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ControllerConfig,
+    FLConfig,
+    init_state,
+    make_eval_fn,
+    make_round_fn,
+    realized_rate,
+)
+from repro.data import federated_arrays, make_synthetic_mnist
+from repro.models.mlp import (
+    init_mlp,
+    make_loss_and_acc_fn,
+    make_loss_fn,
+    mlp_logits,
+)
+
+N = 16
+ROUNDS = 90
+
+
+@pytest.fixture(scope="module")
+def mnist_setup():
+    ds = make_synthetic_mnist(n_train=3360, n_test=800)
+    data, test = federated_arrays(ds, n_clients=N, scheme="label_shard")
+    params0 = init_mlp(jax.random.PRNGKey(0))
+    loss_fn = make_loss_fn(mlp_logits)
+    eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits))
+    return data, test, params0, loss_fn, eval_fn
+
+
+def _run(alg, mnist_setup, rate=0.25, rounds=ROUNDS, K=2.0):
+    data, test, params0, loss_fn, eval_fn = mnist_setup
+    cfg = FLConfig(algorithm=alg, n_clients=N, participation=rate,
+                   rho=0.01, mu=0.01, lr=0.01, epochs=2, batch_size=42,
+                   controller=ControllerConfig(K=K, alpha=0.9), seed=1)
+    state = init_state(cfg, params0)
+    round_fn = make_round_fn(cfg, loss_fn, data)
+    events = []
+    accs = []
+    for k in range(rounds):
+        state, m = round_fn(state)
+        events.append(int(m.num_events))
+        if k % 10 == 0 or k == rounds - 1:
+            _, acc = eval_fn(state, test["x"], test["y"])
+            accs.append(float(acc))
+    return state, events, accs
+
+
+class TestFedBackEndToEnd:
+    def test_converges_on_noniid_mnist(self, mnist_setup):
+        state, events, accs = _run("fedback", mnist_setup)
+        assert accs[-1] > 0.85, accs
+
+    def test_tracks_target_rate(self, mnist_setup):
+        state, events, accs = _run("fedback", mnist_setup)
+        rate = np.asarray(realized_rate(state.ctrl)).mean()
+        # O(1/T) with a full-participation transient: generous band
+        assert 0.15 <= rate <= 0.45, rate
+
+    def test_round_zero_fires_everyone_then_throttles(self, mnist_setup):
+        state, events, accs = _run("fedback", mnist_setup)
+        assert events[0] == N
+        tail = events[len(events) // 2:]
+        assert np.mean(tail) < 0.6 * N
+
+    def test_all_algorithms_learn(self, mnist_setup):
+        for alg in ("fedadmm", "fedavg", "fedprox"):
+            state, events, accs = _run(alg, mnist_setup, rounds=60)
+            assert accs[-1] > 0.5, (alg, accs)
+
+    def test_fedback_beats_random_on_events_to_accuracy(self, mnist_setup):
+        """Tab. 1 direction at CI scale: same (good) accuracy from fewer
+        participation events than random FedADMM selection."""
+        target = 0.85
+        _, ev_fb, acc_fb = _run("fedback", mnist_setup, rounds=ROUNDS)
+        _, ev_fa, acc_fa = _run("fedadmm", mnist_setup, rounds=ROUNDS)
+
+        def events_to(evs, accs, rounds_per_eval=10):
+            cum = np.cumsum(evs)
+            for i, a in enumerate(accs):
+                if a >= target:
+                    return cum[min(i * rounds_per_eval, len(cum) - 1)]
+            return np.inf
+
+        e_fb = events_to(ev_fb, acc_fb)
+        e_fa = events_to(ev_fa, acc_fa)
+        assert e_fb < np.inf, "fedback never reached target"
+        # deterministic selection should not be slower than random
+        assert e_fb <= 1.2 * e_fa, (e_fb, e_fa)
