@@ -1,0 +1,82 @@
+"""Round-engine benchmarks: the client-sharded simulation at scale.
+
+Demonstrates the two scaling claims of the device-mesh round engine:
+
+* one FedBack round at **N ≥ 1000 clients** as a single XLA program
+  (client-stacked vmap; sharded over every available local device via
+  the ``clients`` mesh when more than one is present), and
+* a **multi-seed × controller-gain sweep compiled as ONE program**
+  (scan-of-vmap, see ``repro.launch.sweep``) — compile once, then every
+  additional (seed, gain) run rides the same executable.
+
+CSV columns follow kernel_bench: name, value, derived context.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ControllerConfig, FLConfig, init_state, make_round_fn
+from repro.data import make_least_squares
+from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
+
+
+def _cfg(n_clients: int, n_points: int) -> FLConfig:
+    return FLConfig(algorithm="fedback", n_clients=n_clients,
+                    participation=0.2, rho=1.0, lr=0.1, momentum=0.0,
+                    epochs=1, batch_size=n_points,
+                    controller=ControllerConfig(K=0.5, alpha=0.9))
+
+
+def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
+        dim: int = 64, rounds: int = 5, sweep_clients: int = 256,
+        sweep_seeds: int = 4, sweep_gains: int = 2, sweep_rounds: int = 40):
+    data, params0, loss_fn = make_least_squares(n_clients, n_points, dim)
+    cfg = _cfg(n_clients, n_points)
+
+    # --- N >= 1000 client round (sharded over all local devices) -------
+    n_dev = len(jax.devices())
+    mesh = None
+    if n_dev > 1:
+        from repro.sharding.clients import make_client_mesh
+        usable = max(d for d in range(1, n_dev + 1) if n_clients % d == 0)
+        mesh = make_client_mesh(usable)
+    state = init_state(cfg, params0, mesh=mesh)
+    round_fn = make_round_fn(cfg, loss_fn, data, mesh=mesh)
+
+    t0 = time.perf_counter()
+    state, m = jax.block_until_ready(round_fn(state))
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        state, m = jax.block_until_ready(round_fn(state))
+    per_round_us = (time.perf_counter() - t0) / rounds * 1e6
+    devs = mesh.devices.size if mesh is not None else 1
+    print_fn(f"fedback_round_n{n_clients},{per_round_us:.1f},"
+             f"devices={devs} compile_s={compile_s:.2f} "
+             f"events_r{rounds}={int(m.num_events)}")
+
+    # --- sweep: seeds x gains as ONE compiled program -------------------
+    grid = SweepGrid(seeds=tuple(range(sweep_seeds)),
+                     gains=tuple(1.0 * (i + 1) for i in range(sweep_gains)))
+    small = make_least_squares(sweep_clients, n_points, dim)
+    scfg = _cfg(sweep_clients, n_points)
+    n_runs = len(grid.runs(scfg))
+    states, overrides, _ = init_sweep(scfg, small[1], grid)
+    sweep_fn = make_sweep_fn(scfg, small[2], small[0], rounds=sweep_rounds)
+    t0 = time.perf_counter()
+    final, hist = jax.block_until_ready(sweep_fn(states, overrides))
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    final, hist = jax.block_until_ready(sweep_fn(states, overrides))
+    steady_s = time.perf_counter() - t0
+    rate = float(jnp.mean(hist.events.astype(jnp.float32)))
+    print_fn(f"fedback_sweep_{n_runs}runs_x{sweep_rounds}rounds,"
+             f"{steady_s * 1e6:.1f},one_program=True "
+             f"compile+run_s={first_s:.2f} realized_rate={rate:.3f}")
+
+
+if __name__ == "__main__":
+    run()

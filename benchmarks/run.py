@@ -10,6 +10,8 @@ Prints ``name,...`` CSV rows (cached FL traces under experiments/paper/).
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 
 
@@ -18,12 +20,23 @@ def main() -> None:
     ap.add_argument("--preset", default="quick",
                     choices=["quick", "mid", "paper"])
     ap.add_argument("--datasets", default="mnist,cifar")
-    ap.add_argument("--only", default="table1,table2,fig1,kernels,roofline")
+    ap.add_argument("--only",
+                    default="table1,table2,fig1,kernels,round,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the tier-1 test command (the CI hook) and "
+                         "exit with its status")
     args = ap.parse_args()
+    if args.smoke:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "pytest", "-x", "-q"], env=env))
     only = set(args.only.split(","))
     datasets = args.datasets.split(",")
 
-    from . import fig1, kernel_bench, roofline_bench, table1, table2
+    from . import fig1, kernel_bench, round_bench, roofline_bench, table1, \
+        table2
 
     for ds in datasets:
         if "table1" in only:
@@ -37,6 +50,8 @@ def main() -> None:
             fig1.emit(rows)
     if "kernels" in only:
         kernel_bench.run()
+    if "round" in only:
+        round_bench.run()
     if "roofline" in only:
         roofline_bench.run()
     sys.stdout.flush()

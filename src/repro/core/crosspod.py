@@ -31,10 +31,16 @@ from repro.optim.sgd import sgd_init, sgd_step
 from repro.utils.pytree import (
     stacked_sq_norms,
     tree_broadcast_like,
-    tree_where,
     tree_zeros_like,
 )
 from .controller import ControllerConfig, ControllerState, controller_step, init_controller
+from .engine import (
+    consensus_mean,
+    dual_ascent,
+    gated_commit,
+    participant_mean_loss,
+    prox_center,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,32 +113,30 @@ def make_cross_pod_round(cfg: CrossPodConfig, loss_fn: Callable):
 
     def round_fn(state: CrossPodState, batch):
         # --- consensus + trigger (ω is the all-reduce over pods) -------
-        omega = jax.tree.map(lambda z: jnp.mean(z, axis=0), state.z_prev)
+        omega = consensus_mean(state.z_prev)
         diff = jax.tree.map(lambda z, w: z - w[None], state.z_prev, omega)
         distances = jnp.sqrt(stacked_sq_norms(diff))
         events = distances >= state.ctrl.delta
         ctrl = controller_step(state.ctrl, events, cfg.controller)
 
         # --- local ADMM prox updates (per pod) --------------------------
-        lam_new = jax.tree.map(lambda l, t, w: l + t - w[None],
-                               state.lam, state.theta, omega)
-        center = jax.tree.map(lambda w, l: w[None] - l, omega, lam_new)
+        lam_new = dual_ascent(state.lam, state.theta, omega)
+        center = prox_center(omega, lam_new)
         theta0 = tree_broadcast_like(omega, p)
         theta_out, losses = jax.vmap(local_solve)(theta0, center, batch)
         z_new = jax.tree.map(jnp.add, theta_out, lam_new)
 
         # --- event-gated commit ----------------------------------------
-        theta = tree_where(events, theta_out, state.theta)
-        lam = tree_where(events, lam_new, state.lam)
-        z_prev = tree_where(events, z_new, state.z_prev)
+        theta = gated_commit(events, theta_out, state.theta)
+        lam = gated_commit(events, lam_new, state.lam)
+        z_prev = gated_commit(events, z_new, state.z_prev)
 
-        ev = events.astype(jnp.float32)
         metrics = CrossPodMetrics(
             events=events,
             num_events=jnp.sum(events.astype(jnp.int32)),
             distances=distances,
             delta=ctrl.delta,
-            train_loss=jnp.sum(losses * ev) / jnp.maximum(jnp.sum(ev), 1.0),
+            train_loss=participant_mean_loss(losses, events),
         )
         rng, _ = jax.random.split(state.rng)
         return CrossPodState(theta, lam, z_prev, ctrl, rng,

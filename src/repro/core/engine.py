@@ -1,0 +1,78 @@
+"""Shared round-engine primitives.
+
+The FedBack algorithm family is one program shape instantiated twice in
+this repo: the client-stacked *simulation* engine (``repro.core.fedback``,
+N clients on a ``clients`` device-mesh axis) and the *cross-pod*
+distributed engine (``repro.core.crosspod``, P pods on a ``pod`` axis).
+Both engines are the same per-round algebra:
+
+    dual ascent      λ_i ← λ_i + θ_i − ω                (Eq. 2.3, dual)
+    prox center      c_i = ω − λ_i
+    local solve      θ_i ← inexact prox of f_i at c_i   (vmapped / sharded)
+    gated commit     state_i ← proposed_i  iff  S_i^k
+    consensus        ω = (1/N) Σ_i z_i^prev             (Eq. 2.4)
+
+This module holds that algebra once.  Every helper is written over
+stacked pytrees with a leading client/pod axis; when that axis is laid
+out over a device mesh the ``jnp.mean`` in :func:`consensus_mean` lowers
+to a cross-device all-reduce and everything else stays embarrassingly
+parallel — which is exactly why the two engines can share code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_where
+
+
+def dual_ascent(lam, theta, omega):
+    """λ_i^{k+1} = λ_i^k + θ_i^k − ω^k over the stacked client axis.
+
+    ``lam``/``theta`` are stacked pytrees (N, ...); ``omega`` is the
+    unstacked server pytree (broadcast over the client axis).
+    """
+    return jax.tree.map(lambda l, t, w: l + t - w[None], lam, theta, omega)
+
+
+def prox_center(omega, lam_new):
+    """Per-client prox center c_i = ω^k − λ_i^{k+1} (Eq. 2.3)."""
+    return jax.tree.map(lambda w, l: w[None] - l, omega, lam_new)
+
+
+def gated_commit(events, proposed, current):
+    """Event-gated state commit: client i keeps ``current`` unless S_i^k."""
+    return tree_where(events, proposed, current)
+
+
+def consensus_mean(z_prev):
+    """ω = (1/N) Σ_i z_i^prev — stale entries included (Eq. 2.4).
+
+    Under a client-sharded layout this mean is the round's one genuine
+    collective (an all-reduce over the client mesh axis).
+    """
+    return jax.tree.map(lambda z: jnp.mean(z, axis=0), z_prev)
+
+
+def participant_mean(per_client, events, fallback, num_events=None):
+    """Mean over participants only (FedAvg/FedProx aggregation).
+
+    per_client: stacked pytree (N, ...); ``fallback`` (unstacked) is
+    returned when no client fired this round.
+    """
+    if num_events is None:
+        num_events = jnp.sum(events.astype(jnp.int32))
+    denom = jnp.maximum(num_events, 1).astype(jnp.float32)
+
+    def avg(z, w):
+        m = events.reshape((-1,) + (1,) * (z.ndim - 1))
+        s = jnp.sum(jnp.where(m, z, 0.0), axis=0) / denom
+        return jnp.where(num_events > 0, s, w)
+
+    return jax.tree.map(avg, per_client, fallback)
+
+
+def participant_mean_loss(losses, events):
+    """Mean local train loss among this round's participants ((), fp32)."""
+    ev = events.astype(jnp.float32)
+    return jnp.sum(losses * ev) / jnp.maximum(jnp.sum(ev), 1.0)

@@ -14,12 +14,24 @@ One generic, jittable round program covers the whole algorithm family:
 
 Client states are stacked pytrees (leading axis N); local training is a
 ``vmap`` of a scanned SGD prox solver; participation gates state commits
-through ``tree_where`` masks so the whole round is one XLA program.  In
-the *simulation* engine all N local solves are computed and masked — the
-paper's efficiency metric (participation events) is accounted exactly,
-while wall-clock savings appear in the distributed cross-pod engine
-(``repro.core.crosspod``) where non-participation suppresses real
-collective payloads.
+through ``tree_where`` masks so the whole round is one XLA program.
+
+**Device-mesh scaling.**  Pass ``mesh=`` (a 1-D ``clients`` mesh from
+``repro.sharding.clients.make_client_mesh``) and the same program shards
+every client-stacked pytree — θ, λ, z_prev, controller vectors, data
+shards — over the mesh: local solves run embarrassingly parallel across
+devices, per-client trigger norms stay device-local, and the consensus
+``ω = mean(z_i^prev)`` lowers to a cross-device all-reduce.  This is the
+program shape ``repro.core.crosspod`` uses for pods, unified here for
+the N-client simulation (shared algebra in ``repro.core.engine``).
+Event decisions are bit-identical to the single-device engine (per-
+client reductions never cross devices); ω matches within fp32 collective
+reduction-order tolerance.
+
+In the *simulation* engine all N local solves are computed and masked —
+the paper's efficiency metric (participation events) is accounted
+exactly, while wall-clock savings appear in the distributed cross-pod
+engine where non-participation suppresses real collective payloads.
 """
 from __future__ import annotations
 
@@ -33,10 +45,17 @@ import jax.numpy as jnp
 from repro.optim.sgd import sgd_init, sgd_step
 from repro.utils.pytree import (
     tree_broadcast_like,
-    tree_where,
     tree_zeros_like,
 )
 from .controller import ControllerConfig, init_controller
+from .engine import (
+    consensus_mean,
+    dual_ascent,
+    gated_commit,
+    participant_mean,
+    participant_mean_loss,
+    prox_center,
+)
 from .selection import make_selection
 from .state import FLState, RoundMetrics
 from .trigger import trigger_distances
@@ -62,6 +81,7 @@ class FLConfig:
     trigger_metric: str = "l2"
     warm_start: bool = True  # init local solve at ω (paper footnote 2)
     selection: str | None = None  # override; defaults by algorithm
+    use_trigger_kernel: bool = False  # Pallas trigger-norm fast path (l2)
     seed: int = 0
 
     def selection_name(self) -> str:
@@ -83,31 +103,56 @@ class FLConfig:
 
 def _ctrl_cfg(cfg: "FLConfig") -> ControllerConfig:
     """Controller config with L̄ defaulted from cfg.participation (a
-    per-client array in cfg.controller.target_rate takes precedence)."""
+    per-client array in cfg.controller.target_rate takes precedence).
+
+    Any python scalar counts as "not per-client": an ``int`` target
+    (e.g. ``target_rate=1``) must not silently bypass the defaulting.
+    """
     c = cfg.controller
-    if isinstance(c.target_rate, float):
-        c = c._replace(target_rate=cfg.participation)
+    if isinstance(c.target_rate, (bool, int, float)):
+        c = c._replace(target_rate=float(cfg.participation))
     return c
 
 
-def init_state(cfg: FLConfig, params0) -> FLState:
-    """Alg. 2 initialization: θ_i = z⁰, λ_i = 0, z_i^prev = θ_i, ω = z⁰."""
+def init_state(cfg: FLConfig, params0, *, mesh=None,
+               client_axis: str = "clients") -> FLState:
+    """Alg. 2 initialization: θ_i = z⁰, λ_i = 0, z_i^prev = θ_i, ω = z⁰.
+
+    θ, z_prev and ω are materialized as *distinct* buffers (Alg. 2 sets
+    them all from z⁰, but aliased or caller-owned buffers would break
+    donating the state to the jitted round — donating ω must not delete
+    the caller's ``params0``).  With ``mesh`` the stacked state is
+    placed client-sharded across devices.
+    """
     n = cfg.n_clients
     theta = tree_broadcast_like(params0, n)
+    z_prev = tree_broadcast_like(params0, n)  # separate buffers for donation
     ctrl = init_controller(n, _ctrl_cfg(cfg))
-    return FLState(
+    state = FLState(
         theta=theta,
         lam=tree_zeros_like(theta),
-        z_prev=theta,
-        omega=params0,
+        z_prev=z_prev,
+        omega=jax.tree.map(lambda x: jnp.array(x, copy=True), params0),
         ctrl=ctrl,
         rng=jax.random.PRNGKey(cfg.seed),
         round=jnp.zeros((), jnp.int32),
     )
+    if mesh is not None:
+        from repro.sharding.clients import check_divisible, fl_state_shardings
+        check_divisible(n, mesh, axis=client_axis)
+        state = jax.device_put(
+            state, fl_state_shardings(mesh, axis=client_axis))
+    return state
 
 
 def _epoch_indices(rng, n_points: int, batch_size: int, epochs: int):
-    """(steps, batch) gather indices covering `epochs` shuffled passes."""
+    """(steps, batch) gather indices covering `epochs` shuffled passes.
+
+    The effective batch size is clamped to the shard size: with
+    ``batch_size > n_points`` the old code produced a zero-length scan
+    and ``jnp.mean([])`` → NaN train loss.
+    """
+    batch_size = min(batch_size, n_points)
     per_epoch = n_points // batch_size
 
     def one_epoch(key):
@@ -137,13 +182,39 @@ def _local_solve(loss_fn, theta0, center, x, y, idx, *, rho, lr, momentum):
     return theta, jnp.mean(losses)
 
 
+def _trigger(cfg: FLConfig, state: FLState, mesh, client_axis):
+    """Per-client trigger distances; optionally the Pallas kernel path."""
+    if cfg.use_trigger_kernel and cfg.trigger_metric == "l2":
+        from repro.kernels import ops
+        sq = ops.trigger_sq_norms_pytree(
+            state.z_prev, state.omega, mesh=mesh, axis=client_axis)
+        return jnp.sqrt(sq)
+    return trigger_distances(state.omega, state.z_prev, cfg.trigger_metric)
+
+
 def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
-                  *, jit: bool = True):
+                  *, jit: bool = True, mesh=None,
+                  client_axis: str = "clients", donate: bool | None = None,
+                  ctrl_arg: bool = False):
     """Build the per-round step.
 
     loss_fn(params, x_batch, y_batch) -> scalar mean loss.
     data: {"x": (N, n_i, ...), "y": (N, n_i)} — equal-size client shards.
-    Returns round_fn(state) -> (state, RoundMetrics).
+
+    mesh:   optional 1-D ``clients`` mesh; shards all client-stacked
+            pytrees (state, data) over its axis and jits with explicit
+            in/out shardings, turning the consensus mean into a
+            cross-device all-reduce.
+    donate: donate the input FLState buffers to the round (the state is
+            produced fresh each round, so XLA can update it in place).
+            Default: on for accelerator backends, off on CPU where
+            donation is unimplemented and only warns.
+    ctrl_arg: build ``round_fn(state, ctrl_overrides)`` instead, where
+            ``ctrl_overrides`` is a dict of runtime controller-gain
+            overrides (e.g. ``{"K": k, "target_rate": r}``) — the hook
+            the batched sweep runner vmaps over.
+
+    Returns round_fn(state[, ctrl_overrides]) -> (state, RoundMetrics).
     """
     n = cfg.n_clients
     assert data["x"].shape[0] == n, (data["x"].shape, n)
@@ -157,26 +228,35 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
     rho = cfg.local_rho()
     is_admm = cfg.algorithm in ADMM_FAMILY
 
+    if mesh is not None:
+        from repro.sharding.clients import (
+            check_divisible,
+            constrain_clients,
+            fl_state_shardings,
+            round_metrics_shardings,
+            shard_client_data,
+        )
+        check_divisible(n, mesh, axis=client_axis)
+        data = shard_client_data(mesh, data, axis=client_axis)
+        pin = partial(constrain_clients, mesh=mesh, axis=client_axis)
+    else:
+        pin = lambda t, **_: t  # noqa: E731
+
     solver = partial(_local_solve, loss_fn, rho=rho, lr=cfg.lr,
                      momentum=cfg.momentum)
 
-    def round_fn(state: FLState):
+    def round_body(state: FLState, ctrl_overrides):
         rng, sel_rng, data_rng = jax.random.split(state.rng, 3)
 
         # --- server: trigger distances + selection --------------------
-        distances = trigger_distances(state.omega, state.z_prev,
-                                      cfg.trigger_metric)
-        events, ctrl = select(sel_rng, state, distances)
+        distances = _trigger(cfg, state, mesh, client_axis)
+        events, ctrl = select(sel_rng, state, distances,
+                              ctrl_overrides=ctrl_overrides)
 
         # --- client-side computation (vmapped, masked commit) ---------
         if is_admm:
-            # λ_i^{k+1} = λ_i^k + θ_i^k − ω^k           (Eq. 2.3, dual)
-            lam_new = jax.tree.map(
-                lambda l, t, w: l + t - w[None], state.lam, state.theta,
-                state.omega)
-            # prox center c_i = ω^k − λ_i^{k+1}
-            center = jax.tree.map(lambda w, l: w[None] - l, state.omega,
-                                  lam_new)
+            lam_new = dual_ascent(state.lam, state.theta, state.omega)
+            center = prox_center(state.omega, lam_new)
         else:
             lam_new = state.lam  # stays zero
             center = tree_broadcast_like(state.omega, n)
@@ -187,48 +267,62 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             lambda k: _epoch_indices(k, n_points, cfg.batch_size, cfg.epochs)
         )(jax.random.split(data_rng, n))
         theta_out, losses = jax.vmap(solver)(
-            theta_init, center, data["x"], data["y"], idx)
+            pin(theta_init), pin(center), data["x"], data["y"], pin(idx))
+        theta_out = pin(theta_out)
 
         z_new = (jax.tree.map(jnp.add, theta_out, lam_new) if is_admm
                  else theta_out)
 
-        theta = tree_where(events, theta_out, state.theta)
-        lam = tree_where(events, lam_new, state.lam)
-        z_prev = tree_where(events, z_new, state.z_prev)
+        theta = gated_commit(events, theta_out, state.theta)
+        lam = gated_commit(events, lam_new, state.lam)
+        z_prev = pin(gated_commit(events, z_new, state.z_prev))
 
         # --- server-side aggregation -----------------------------------
         num_events = jnp.sum(events.astype(jnp.int32))
         if is_admm:
             # ω^{k+1} = (1/N) Σ_i z_i^prev  (stale entries included, Eq. 2.4)
-            omega = jax.tree.map(lambda z: jnp.mean(z, axis=0), z_prev)
+            omega = consensus_mean(z_prev)
         else:
             # FedAvg/FedProx: non-weighted mean over participants only.
-            denom = jnp.maximum(num_events, 1).astype(jnp.float32)
+            omega = participant_mean(z_new, events, state.omega,
+                                     num_events=num_events)
 
-            def avg(z, w):
-                m = events.reshape((-1,) + (1,) * (z.ndim - 1))
-                s = jnp.sum(jnp.where(m, z, 0.0), axis=0) / denom
-                return jnp.where(num_events > 0, s, w)
-
-            omega = jax.tree.map(avg, z_new, state.omega)
-
-        ev_f = events.astype(jnp.float32)
-        train_loss = jnp.sum(losses * ev_f) / jnp.maximum(jnp.sum(ev_f), 1.0)
         metrics = RoundMetrics(
             events=events,
             num_events=num_events,
             distances=distances,
             delta=ctrl.delta,
             load=ctrl.load,
-            train_loss=train_loss,
+            train_loss=participant_mean_loss(losses, events),
         )
         new_state = FLState(theta=theta, lam=lam, z_prev=z_prev, omega=omega,
                             ctrl=ctrl, rng=rng, round=state.round + 1)
         return new_state, metrics
 
-    # Note: no donation — θ and z_prev alias the same buffers at init
-    # (Alg. 2 sets z⁰ = θ⁰), and the simulation state is small.
-    return jax.jit(round_fn) if jit else round_fn
+    if ctrl_arg:
+        round_fn = round_body
+    else:
+        def round_fn(state):
+            return round_body(state, None)
+
+    if not jit:
+        return round_fn
+
+    # Donation is safe now that init_state materializes z_prev separately
+    # from θ; CPU has no donation support and would warn on every call.
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    donate_argnums = (0,) if donate else ()
+
+    if mesh is None:
+        return jax.jit(round_fn, donate_argnums=donate_argnums)
+
+    state_sh = fl_state_shardings(mesh, axis=client_axis)
+    metrics_sh = round_metrics_shardings(mesh, axis=client_axis)
+    in_sh = (state_sh, None) if ctrl_arg else (state_sh,)
+    return jax.jit(round_fn, in_shardings=in_sh,
+                   out_shardings=(state_sh, metrics_sh),
+                   donate_argnums=donate_argnums)
 
 
 def make_eval_fn(loss_and_acc_fn: Callable, *, jit: bool = True):

@@ -11,6 +11,18 @@ The paper contrasts two families:
 Both produce an (N,) boolean event vector per round; they are
 interchangeable inside the round engine, which is exactly how the paper
 frames its baselines ("FedADMM is FedBack with random selection").
+
+Every strategy takes an optional ``ctrl_overrides`` dict of *runtime*
+controller-gain overrides (e.g. ``{"K": k, "target_rate": r}``) whose
+values may be traced scalars — this is what lets the batched sweep
+runner (``repro.launch.sweep``) vmap one compiled round program over a
+whole grid of controller gains.  Strategies whose controller is inert
+(random/full/...) ignore it.
+
+All strategies are pure per-client programs except the permutation-based
+ones (random, round_robin), which need the global client count; under a
+client-sharded mesh GSPMD keeps the permutation replicated and scatters
+the events, so every strategy works unchanged on the sharded engine.
 """
 from __future__ import annotations
 
@@ -28,9 +40,11 @@ class FedBackSelection:
     controller: ControllerConfig
     metric: str = "l2"
 
-    def __call__(self, rng, state, distances):
+    def __call__(self, rng, state, distances, ctrl_overrides=None):
+        cfg = (self.controller if not ctrl_overrides
+               else self.controller._replace(**ctrl_overrides))
         events = evaluate_trigger(distances, state.ctrl.delta)
-        ctrl = controller_step(state.ctrl, events, self.controller)
+        ctrl = controller_step(state.ctrl, events, cfg)
         return events, ctrl
 
 
@@ -40,7 +54,7 @@ class RandomSelection:
 
     rate: float
 
-    def __call__(self, rng, state, distances):
+    def __call__(self, rng, state, distances, ctrl_overrides=None):
         n = state.ctrl.delta.shape[0]
         k = max(int(round(self.rate * n)), 1)
         perm = jax.random.permutation(rng, n)
@@ -57,7 +71,7 @@ class BernoulliSelection:
 
     rate: float
 
-    def __call__(self, rng, state, distances):
+    def __call__(self, rng, state, distances, ctrl_overrides=None):
         n = state.ctrl.delta.shape[0]
         events = jax.random.bernoulli(rng, self.rate, (n,))
         ctrl = controller_step(state.ctrl, events,
@@ -69,7 +83,7 @@ class BernoulliSelection:
 class FullSelection:
     """δ ≡ 0 — vanilla consensus ADMM (every client, every round)."""
 
-    def __call__(self, rng, state, distances):
+    def __call__(self, rng, state, distances, ctrl_overrides=None):
         n = state.ctrl.delta.shape[0]
         events = jnp.ones((n,), bool)
         ctrl = controller_step(state.ctrl, events,
@@ -85,7 +99,7 @@ class RoundRobinSelection:
 
     rate: float
 
-    def __call__(self, rng, state, distances):
+    def __call__(self, rng, state, distances, ctrl_overrides=None):
         n = state.ctrl.delta.shape[0]
         k = max(int(round(self.rate * n)), 1)
         start = (state.round * k) % n

@@ -1,9 +1,15 @@
 """Federated state containers.
 
 All client-side quantities are *stacked* pytrees with a leading client
-axis of size N — one jittable program advances every client at once
-(vmap over the axis locally, or shard it over the ``data`` mesh axis for
-the distributed simulation).
+axis of size N — one jittable program advances every client at once:
+vmap over the axis on a single device, or lay it out over the 1-D
+``clients`` device mesh (``repro.sharding.clients``) so the same program
+runs the local solves embarrassingly parallel across devices and the
+consensus mean as a cross-device all-reduce.
+
+``CLIENT_STACKED_FIELDS`` names the FLState fields that carry the
+stacked axis; everything else (ω, rng, round) is server-side and stays
+replicated under the mesh layout.
 """
 from __future__ import annotations
 
@@ -12,6 +18,12 @@ from typing import Any, NamedTuple
 import jax
 
 from .controller import ControllerState
+
+#: FLState fields whose leaves carry the leading (N, ...) client axis.
+CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev")
+
+#: ControllerState fields with a per-client (N,) vector.
+CTRL_STACKED_FIELDS = ("delta", "load", "event_count")
 
 
 class FLState(NamedTuple):

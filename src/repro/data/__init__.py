@@ -1,3 +1,4 @@
-from .synthetic import make_synthetic_mnist, make_synthetic_cifar  # noqa: F401
+from .synthetic import make_synthetic_mnist, make_synthetic_cifar, \
+    make_least_squares  # noqa: F401
 from .partition import partition_label_shard, partition_dirichlet  # noqa: F401
 from .pipeline import federated_arrays  # noqa: F401

@@ -107,3 +107,30 @@ def make_synthetic_cifar(n_train: int = 10000, n_test: int = 2000,
         nuisance_dim=96, nuisance_scale=0.6, clip01=False,
         signal_dim=40, label_flip=0.17, smooth_hwc=(32, 32, 3, 8))
     return ds
+
+
+def make_least_squares(n_clients: int, n_points: int = 16, dim: int = 8,
+                       seed: int = 0):
+    """Per-client least-squares shards with heterogeneous targets.
+
+    The analytically-solvable problem family used by the engine tests,
+    sweep demos and round benchmarks: client i holds (A_i, b_i) with
+    b_i = A_i θ_i^true, so local minimizers genuinely differ (non-iid).
+
+    Returns (data, params0, ls_loss) ready for ``make_round_fn``:
+    data = {"x": (N, n_points, dim), "y": (N, n_points)} jnp arrays,
+    params0 = {"theta": zeros(dim)}, ls_loss(params, x, y) → scalar.
+    """
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_clients, n_points, dim)).astype(np.float32)
+    theta_true = rng.normal(size=(n_clients, dim)).astype(np.float32)
+    b = np.einsum("npd,nd->np", A, theta_true).astype(np.float32)
+
+    def ls_loss(params, x, y):
+        r = x @ params["theta"] - y
+        return 0.5 * jnp.mean(r * r)
+
+    return ({"x": jnp.asarray(A), "y": jnp.asarray(b)},
+            {"theta": jnp.zeros((dim,), jnp.float32)}, ls_loss)

@@ -18,7 +18,10 @@ from . import ref
 from .admm_update import admm_update as _admm_update
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_scan as _ssd_scan
-from .trigger_norms import trigger_sq_norms as _trigger_sq_norms
+from .trigger_norms import (
+    trigger_sq_norms as _trigger_sq_norms,
+    trigger_sq_norms_sharded as _trigger_sq_norms_sharded,
+)
 
 
 def _default_interpret() -> bool:
@@ -50,11 +53,15 @@ def ssd_scan(states, decays, *, interpret: bool | None = None):
 
 
 def trigger_sq_norms_pytree(z_prev_stacked, omega, *,
-                            interpret: bool | None = None):
+                            interpret: bool | None = None,
+                            mesh=None, axis: str = "clients"):
     """Stacked-pytree front-end for the FedBack server trigger.
 
     z_prev_stacked: pytree with leading client axis N; omega: matching
-    pytree.  Returns (N,) fp32 squared distances.
+    pytree.  Returns (N,) fp32 squared distances.  With ``mesh`` the
+    kernel runs under ``shard_map`` over the client mesh axis — one
+    launch per device on its local client rows (the axis size must
+    divide N).
     """
     n = jax.tree.leaves(z_prev_stacked)[0].shape[0]
     z2d = jnp.concatenate(
@@ -63,6 +70,10 @@ def trigger_sq_norms_pytree(z_prev_stacked, omega, *,
     w1d = jnp.concatenate(
         [x.reshape(-1).astype(jnp.float32)
          for x in jax.tree.leaves(omega)])
+    interpret = _default_interpret() if interpret is None else interpret
+    if mesh is not None:
+        return _trigger_sq_norms_sharded(z2d, w1d, mesh, axis=axis,
+                                         interpret=interpret)
     return trigger_sq_norms(z2d, w1d, interpret=interpret)
 
 

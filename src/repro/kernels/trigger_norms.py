@@ -69,3 +69,25 @@ def trigger_sq_norms(z_prev, omega, *, block_n: int = 8,
         interpret=interpret,
     )(z_prev, omega)
     return out[:n]
+
+
+def trigger_sq_norms_sharded(z_prev, omega, mesh, *, axis: str = "clients",
+                             block_n: int = 8, block_d: int = 1024,
+                             interpret: bool = True):
+    """Client-sharded trigger norms: ``shard_map`` over the ``clients``
+    mesh axis, one Pallas kernel launch per device on its local rows.
+
+    z_prev: (N, D) sharded over ``axis`` (the axis size must divide N);
+    omega: (D,) replicated.  The per-client reduction over D is device-
+    local — the only collective in the FedBack round stays the consensus
+    mean — so the result is bit-identical to the single-device kernel.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    kernel = functools.partial(trigger_sq_norms, block_n=block_n,
+                               block_d=block_d, interpret=interpret)
+    fn = shard_map(kernel, mesh=mesh,
+                   in_specs=(P(axis, None), P(None)), out_specs=P(axis),
+                   check_rep=False)
+    return fn(z_prev, omega)

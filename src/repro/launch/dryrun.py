@@ -45,6 +45,7 @@ from repro.launch.steps import (
     make_train_step,
 )
 from repro.models.api import active_param_count, build_model, param_count
+from repro.utils.hlo import cost_analysis_dict
 
 
 def _mem_dict(ma) -> dict:
@@ -153,7 +154,7 @@ def _compile_cost(cfg, shape, *, multi_pod, mode, local_steps):
     _, model, mesh, (fn, in_sh, out_sh, args), step_mode, seq, batch = built
     compiled = jax.jit(fn, in_shardings=in_sh,
                        out_shardings=out_sh).lower(*args).compile()
-    ca = dict(compiled.cost_analysis() or {})
+    ca = cost_analysis_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     n_chips = int(np.prod(list(mesh.shape.values())))
     from repro.utils.hlo import total_collective_bytes
@@ -210,7 +211,7 @@ def dry_run(arch: str, shape: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
 
-    ca = dict(compiled.cost_analysis() or {})
+    ca = cost_analysis_dict(compiled.cost_analysis())
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     n_chips = int(np.prod(list(mesh.shape.values())))

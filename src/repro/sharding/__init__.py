@@ -1,1 +1,10 @@
 from .specs import param_specs, batch_specs, pod_stacked_specs, cache_specs  # noqa: F401
+from .clients import (  # noqa: F401
+    CLIENT_AXIS,
+    client_data_shardings,
+    constrain_clients,
+    fl_state_shardings,
+    make_client_mesh,
+    round_metrics_shardings,
+    shard_client_data,
+)

@@ -1,0 +1,121 @@
+"""Client-axis device meshes and shardings for the simulation engine.
+
+The FedBack simulation stacks every client quantity along a leading axis
+of size N (``repro.core.state``).  These helpers lay that axis out over
+a 1-D ``clients`` device mesh so the vmapped local solves run
+embarrassingly parallel across devices, while the consensus mean and
+any cross-client reductions lower to all-reduces — the same program
+shape ``repro.core.crosspod`` uses for its ``pod`` axis.
+
+All sharding trees returned here are *prefix* pytrees of
+``NamedSharding``: a single sharding leaf stands for a whole state
+subtree (jit's ``in_shardings``/``out_shardings`` and ``device_put``
+both accept prefixes), so nothing needs the concrete leaf ranks.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+CLIENT_AXIS = "clients"
+
+
+def make_client_mesh(n_devices: int | None = None, *,
+                     axis: str = CLIENT_AXIS) -> Mesh:
+    """1-D mesh over the first ``n_devices`` local devices (default all)."""
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices for a client mesh, found {len(devices)} — "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before importing jax")
+    return Mesh(np.asarray(devices[:n]), (axis,))
+
+
+def check_divisible(n_clients: int, mesh: Mesh, *,
+                    axis: str = CLIENT_AXIS) -> None:
+    """Fail early (with the fix in the message) on uneven client shards."""
+    size = mesh.shape[axis]
+    if n_clients % size:
+        raise ValueError(
+            f"n_clients={n_clients} must be divisible by the '{axis}' mesh "
+            f"axis size {size}; pick a dividing device count "
+            f"(e.g. {max(d for d in range(1, size + 1) if n_clients % d == 0)})")
+
+
+def _sharded(mesh, axis):
+    return NamedSharding(mesh, P(axis))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def fl_state_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
+                       batched: bool = False):
+    """Prefix-pytree of shardings for :class:`repro.core.state.FLState`.
+
+    Client-stacked subtrees (θ, λ, z_prev and the per-client controller
+    vectors) shard their leading axis over ``axis``; server-side state
+    (ω, rng, round counters) is replicated.  With ``batched=True`` the
+    leaves carry an extra leading sweep axis (see ``repro.launch.sweep``)
+    which stays replicated while the client axis (now dim 1) is sharded.
+    """
+    from repro.core.controller import ControllerState
+    from repro.core.state import (
+        CLIENT_STACKED_FIELDS,
+        CTRL_STACKED_FIELDS,
+        FLState,
+    )
+
+    spec = P(None, axis) if batched else P(axis)
+    c = NamedSharding(mesh, spec)
+    r = _replicated(mesh)
+    ctrl = ControllerState(**{
+        f: (c if f in CTRL_STACKED_FIELDS else r)
+        for f in ControllerState._fields})
+    return FLState(**{
+        f: (c if f in CLIENT_STACKED_FIELDS else r)
+        for f in FLState._fields if f != "ctrl"}, ctrl=ctrl)
+
+
+def round_metrics_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
+                            batched: bool = False):
+    """Prefix-pytree of shardings for ``repro.core.state.RoundMetrics``."""
+    from repro.core.state import RoundMetrics
+
+    spec = P(None, axis) if batched else P(axis)
+    c = NamedSharding(mesh, spec)
+    r = _replicated(mesh)
+    return RoundMetrics(events=c, num_events=r, distances=c, delta=c,
+                        load=c, train_loss=r)
+
+
+def client_data_shardings(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):
+    """Shard the leading (client) axis of every data leaf."""
+    sh = _sharded(mesh, axis)
+    return jax.tree.map(lambda _: sh, data)
+
+
+def shard_client_data(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):
+    """``device_put`` the client-sharded data onto the mesh."""
+    return jax.device_put(data, client_data_shardings(mesh, data, axis=axis))
+
+
+def constrain_clients(tree, mesh: Mesh | None, *, axis: str = CLIENT_AXIS):
+    """Pin the leading client axis of stacked intermediates inside a
+    jitted round.  No-op when ``mesh`` is None so the single-device
+    engine pays nothing.
+    """
+    if mesh is None:
+        return tree
+
+    def pin(x):
+        if x.ndim == 0:
+            return x
+        spec = P(axis, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(pin, tree)

@@ -18,6 +18,28 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
+
+def cost_analysis_dict(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    jax < 0.4.35 returns a list with one properties-dict per program;
+    newer versions return the dict directly (and either may be None when
+    the backend provides no analysis).  ``dict(list_of_dicts)`` raises
+    ``ValueError: dictionary update sequence element #0 has length 53``,
+    which used to error every dry-run on version drift.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    if isinstance(ca, (list, tuple)):
+        out: dict = {}
+        for entry in ca:
+            if entry:
+                out.update(entry)
+        return out
+    return dict(ca)
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

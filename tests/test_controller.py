@@ -167,3 +167,29 @@ class TestControllerMechanics:
             state = controller_step(state, jnp.asarray(ev), cfg)
         np.testing.assert_allclose(np.asarray(realized_rate(state)),
                                    [0.75, 0.25])
+
+
+class TestTargetRateDefaulting:
+    """`_ctrl_cfg` defaults L̄ from FLConfig.participation for any python
+    scalar target — an int (e.g. target_rate=1) must not bypass it."""
+
+    def _resolved(self, target_rate):
+        from repro.core.fedback import FLConfig, _ctrl_cfg
+        cfg = FLConfig(participation=0.25,
+                       controller=ControllerConfig(target_rate=target_rate))
+        return _ctrl_cfg(cfg).target_rate
+
+    def test_float_target_is_replaced(self):
+        assert self._resolved(0.1) == 0.25
+
+    def test_int_target_is_replaced(self):
+        assert self._resolved(1) == 0.25
+
+    def test_per_client_array_takes_precedence(self):
+        targets = jnp.asarray([0.1, 0.9], jnp.float32)
+        resolved = self._resolved(targets)
+        np.testing.assert_array_equal(np.asarray(resolved),
+                                      np.asarray(targets))
+
+    def test_resolved_target_is_float(self):
+        assert isinstance(self._resolved(1), float)

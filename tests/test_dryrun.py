@@ -39,6 +39,7 @@ def records():
     return json.loads(line[-1][len("RESULT:"):])
 
 
+@pytest.mark.slow
 class TestDryRunMachinery:
     def test_single_pod_train_compiles(self, records):
         r = records[0]
@@ -67,6 +68,33 @@ class TestDryRunMachinery:
             assert "memory_analysis" in r
             assert "analytic_hbm_bytes" in r
 
+
+class TestCostAnalysisSchema:
+    """Regression for the jax ≥0.4.35 cost_analysis() API drift: the
+    result changed from a list-of-dicts to a dict, and ``dict(...)`` on
+    the old shape raised ValueError, erroring all dry-run records."""
+
+    def test_normalizes_both_shapes(self):
+        from repro.utils.hlo import cost_analysis_dict
+        props = {"flops": 1.0, "bytes accessed": 2.0}
+        assert cost_analysis_dict(props) == props          # jax >= 0.4.35
+        assert cost_analysis_dict([props]) == props        # jax < 0.4.35
+        assert cost_analysis_dict(None) == {}
+        assert cost_analysis_dict([]) == {}
+        assert cost_analysis_dict([None, props]) == props
+
+    def test_real_compiled_module(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.utils.hlo import cost_analysis_dict
+        compiled = jax.jit(lambda x: x @ x).lower(
+            jnp.ones((8, 8), jnp.float32)).compile()
+        ca = cost_analysis_dict(compiled.cost_analysis())
+        assert isinstance(ca, dict) and ca, "empty cost analysis"
+        assert float(ca.get("flops", 0.0)) >= 0.0
+
+
+class TestSkipRules:
     def test_skip_rules_via_dry_run(self):
         from repro.launch.dryrun import build_step  # light import check
         from repro.configs import get_config, shape_applicable

@@ -63,7 +63,11 @@ class TestBlockwiseAttention:
                                 kv_block=8, unroll=False)
         b = blockwise_attention(q, k, v, q_positions=pos, kv_positions=pos,
                                 kv_block=8, unroll=True)
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+        # rolled scan vs unrolled python loop fuse differently on XLA-CPU;
+        # allow fp32 reassociation noise (observed 2e-6 relative on 1/2048
+        # elements the first time this module actually ran in CI).
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
 
 
 class TestMoE:

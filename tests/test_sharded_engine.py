@@ -1,0 +1,197 @@
+"""Device-mesh round engine tests.
+
+* sharded-vs-single-device equivalence: same seed ⇒ bit-identical event
+  decisions and fp32-tolerance ω (the consensus all-reduce may reorder
+  the sum), exercised in a subprocess with 8 forced host devices;
+* the batched sweep runner: one program reproduces per-run histories
+  that match individually-driven runs;
+* regression tests for the `_epoch_indices` batch-size clamp and state
+  donation.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, FLConfig, init_state, make_round_fn
+from repro.core.fedback import _epoch_indices
+from repro.data import make_least_squares
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_ls_loss = make_least_squares(1)[2]
+
+
+def _quadratic(n_clients, n_points=8, dim=5, seed=0):
+    data, params0, _ = make_least_squares(n_clients, n_points, dim, seed)
+    return data, params0
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ControllerConfig, FLConfig, init_state, make_round_fn
+from repro.data import make_least_squares
+from repro.kernels import ops
+from repro.sharding.clients import make_client_mesh
+
+rng = np.random.default_rng(0)
+N, NP, D = 8, 8, 5
+data, p0, ls = make_least_squares(N, NP, D)
+
+cfg = FLConfig(algorithm="fedback", n_clients=N, participation=0.5, rho=1.0,
+               lr=0.1, momentum=0.0, epochs=4, batch_size=NP,
+               controller=ControllerConfig(K=0.2, alpha=0.9))
+out = {}
+mesh = make_client_mesh(8)
+for name, m in (("single", None), ("sharded", mesh)):
+    state = init_state(cfg, p0, mesh=m)
+    round_fn = make_round_fn(cfg, ls, data, mesh=m)
+    events = []
+    for _ in range(15):
+        state, met = round_fn(state)
+        events.append(np.asarray(met.events).astype(int).tolist())
+    out[name] = {"events": events,
+                 "omega": np.asarray(state.omega["theta"]).tolist(),
+                 "sharding": str(jax.tree.leaves(state.theta)[0].sharding)}
+
+# Pallas trigger kernel under shard_map == jnp reference, on sharded rows
+z = jnp.asarray(rng.normal(size=(N, 96)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(96,)), jnp.float32)
+z_sh = jax.device_put(z, jax.sharding.NamedSharding(
+    mesh, jax.sharding.PartitionSpec("clients", None)))
+sq_sharded = ops.trigger_sq_norms_pytree(
+    {"p": z_sh}, {"p": w}, mesh=mesh)
+sq_ref = np.sum((np.asarray(z) - np.asarray(w)) ** 2, axis=1)
+out["kernel_max_err"] = float(np.abs(np.asarray(sq_sharded) - sq_ref).max())
+print("RESULT:" + json.dumps(out))
+"""
+
+
+class TestShardedEquivalence:
+    @pytest.fixture(scope="class")
+    def result(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=560,
+                             cwd=REPO)
+        assert out.returncode == 0, out.stderr[-3000:]
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")]
+        return json.loads(line[-1][len("RESULT:"):])
+
+    def test_state_is_client_sharded(self, result):
+        assert "clients" in result["sharded"]["sharding"]
+
+    def test_events_bit_identical(self, result):
+        assert result["single"]["events"] == result["sharded"]["events"]
+
+    def test_round_zero_fires_everyone(self, result):
+        assert result["sharded"]["events"][0] == [1] * 8
+
+    def test_omega_within_fp32_tolerance(self, result):
+        a = np.asarray(result["single"]["omega"])
+        b = np.asarray(result["sharded"]["omega"])
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def test_trigger_kernel_sharded_matches_reference(self, result):
+        assert result["kernel_max_err"] < 1e-3
+
+
+class TestSweepRunner:
+    def test_sweep_matches_individual_runs(self):
+        from repro.launch.sweep import run_sweep
+        n, rounds = 8, 10
+        data, params0 = _quadratic(n)
+        cfg = FLConfig(algorithm="fedback", n_clients=n, participation=0.5,
+                       rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
+                       controller=ControllerConfig(K=0.2, alpha=0.9))
+        runs, final, hist = run_sweep(cfg, _ls_loss, data, params0,
+                                      rounds=rounds, seeds=(0, 3),
+                                      gains=(0.2,))
+        assert [r[0] for r in runs] == [0, 3]
+        assert hist.events.shape == (rounds, 2, n)
+        for b, (seed, K, _) in enumerate(runs):
+            icfg = FLConfig(algorithm="fedback", n_clients=n,
+                            participation=0.5, rho=1.0, lr=0.1, momentum=0.0,
+                            epochs=2, batch_size=4, seed=seed,
+                            controller=ControllerConfig(K=K, alpha=0.9))
+            state = init_state(icfg, params0)
+            round_fn = make_round_fn(icfg, _ls_loss, data)
+            for k in range(rounds):
+                state, m = round_fn(state)
+                np.testing.assert_array_equal(
+                    np.asarray(hist.events[k, b]), np.asarray(m.events))
+            np.testing.assert_allclose(
+                np.asarray(jax.tree.leaves(final.omega)[0][b]),
+                np.asarray(jax.tree.leaves(state.omega)[0]),
+                rtol=1e-5, atol=1e-6)
+
+    def test_gain_grid_changes_dynamics_without_retrace(self):
+        from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
+        n = 8
+        data, params0 = _quadratic(n)
+        cfg = FLConfig(algorithm="fedback", n_clients=n, participation=0.2,
+                       rho=1.0, lr=0.1, momentum=0.0, epochs=1, batch_size=8,
+                       controller=ControllerConfig(K=0.1, alpha=0.9))
+        grid = SweepGrid(seeds=(0,), gains=(0.05, 5.0))
+        states, overrides, runs = init_sweep(cfg, params0, grid)
+        sweep_fn = make_sweep_fn(cfg, _ls_loss, data, rounds=30)
+        _, hist = sweep_fn(states, overrides)
+        rates = np.asarray(jnp.mean(hist.events.astype(jnp.float32),
+                                    axis=(0, 2)))
+        # the high-gain run throttles much harder toward L̄=0.2
+        assert rates[1] < rates[0] - 0.05, rates
+
+
+class TestEpochIndicesClamp:
+    def test_oversized_batch_clamps_to_shard(self):
+        idx = _epoch_indices(jax.random.PRNGKey(0), n_points=6,
+                             batch_size=100, epochs=2)
+        assert idx.shape == (2, 6)  # one full-shard batch per epoch
+        assert int(idx.max()) < 6
+
+    def test_round_with_oversized_batch_has_finite_loss(self):
+        """batch_size > n_points used to scan 0 steps → NaN train loss."""
+        n = 4
+        data, params0 = _quadratic(n, n_points=6)
+        cfg = FLConfig(algorithm="fedback", n_clients=n, participation=1.0,
+                       rho=1.0, lr=0.1, momentum=0.0, epochs=2,
+                       batch_size=100)
+        state = init_state(cfg, params0)
+        round_fn = make_round_fn(cfg, _ls_loss, data)
+        state, m = round_fn(state)
+        assert np.isfinite(float(m.train_loss))
+        assert all(np.isfinite(x).all() for x in
+                   jax.tree.leaves(jax.device_get(state)))
+
+
+class TestDonation:
+    def test_donated_round_matches_undonated(self):
+        n = 4
+        data, params0 = _quadratic(n)
+        cfg = FLConfig(algorithm="fedback", n_clients=n, participation=0.5,
+                       rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
+                       controller=ControllerConfig(K=0.2, alpha=0.9))
+        outs = []
+        for donate in (False, True):
+            state = init_state(cfg, params0)
+            round_fn = make_round_fn(cfg, _ls_loss, data, donate=donate)
+            for _ in range(5):
+                state, m = round_fn(state)
+            outs.append(np.asarray(state.omega["theta"]))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_init_state_materializes_zprev(self):
+        """θ and z_prev must be distinct buffers or donation would alias."""
+        cfg = FLConfig(n_clients=4)
+        state = init_state(cfg, {"w": jnp.ones((3,), jnp.float32)})
+        th = state.theta["w"]
+        zp = state.z_prev["w"]
+        assert th.unsafe_buffer_pointer() != zp.unsafe_buffer_pointer()
