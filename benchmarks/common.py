@@ -16,7 +16,8 @@ import jax
 import numpy as np
 
 from repro.configs import paper_cifar, paper_mnist
-from repro.core import init_state, make_eval_fn, make_round_fn
+from repro.core import init_state, make_eval_fn, make_flat_spec, \
+    make_round_fn
 from repro.data import federated_arrays, make_synthetic_cifar, \
     make_synthetic_mnist
 from repro.models.mlp import (
@@ -53,13 +54,18 @@ def _apply_per_dataset(preset: dict, dataset: str) -> dict:
 
 
 def _setup(dataset: str, preset: dict, seed: int):
+    """Dataset/model wiring; runs on the flat (N, D) client-state layout
+    (``spec``) so the paper benchmarks exercise the engine's primary
+    layout — model code stays pytree-based, the codec handles the rest.
+    """
     if dataset == "mnist":
         ds = make_synthetic_mnist(preset["n_train"], preset["n_test"])
         data, test = federated_arrays(ds, n_clients=preset["n_clients"],
                                       scheme="label_shard", seed=seed)
         params0 = init_mlp(jax.random.PRNGKey(seed))
+        spec = make_flat_spec(params0)
         loss_fn = make_loss_fn(mlp_logits)
-        eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits))
+        eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits), spec=spec)
         mkcfg = paper_mnist.fl_config
         target = paper_mnist.TARGET_ACCURACY
     elif dataset == "cifar":
@@ -69,13 +75,14 @@ def _setup(dataset: str, preset: dict, seed: int):
                                       beta=paper_cifar.DIRICHLET_BETA,
                                       seed=seed)
         params0 = init_cnn(jax.random.PRNGKey(seed))
+        spec = make_flat_spec(params0)
         loss_fn = make_loss_fn(cnn_logits)
-        eval_fn = make_eval_fn(make_loss_and_acc_fn(cnn_logits))
+        eval_fn = make_eval_fn(make_loss_and_acc_fn(cnn_logits), spec=spec)
         mkcfg = paper_cifar.fl_config
         target = paper_cifar.TARGET_ACCURACY
     else:
         raise ValueError(dataset)
-    return data, test, params0, loss_fn, eval_fn, mkcfg, target
+    return data, test, params0, spec, loss_fn, eval_fn, mkcfg, target
 
 
 def run_sweep(dataset: str, algorithm: str, rate: float, *,
@@ -89,12 +96,12 @@ def run_sweep(dataset: str, algorithm: str, rate: float, *,
         with open(path) as f:
             return json.load(f)
 
-    data, test, params0, loss_fn, eval_fn, mkcfg, target = _setup(
+    data, test, params0, spec, loss_fn, eval_fn, mkcfg, target = _setup(
         dataset, preset, seed)
     cfg = mkcfg(algorithm=algorithm, participation=rate,
                 n_clients=preset["n_clients"], seed=seed)
-    state = init_state(cfg, params0)
-    round_fn = make_round_fn(cfg, loss_fn, data)
+    state = init_state(cfg, params0, spec=spec)
+    round_fn = make_round_fn(cfg, loss_fn, data, spec=spec)
 
     events_per_round, acc_trace, loss_trace, load_trace = [], [], [], []
     event_counts = np.zeros(preset["n_clients"], np.int64)

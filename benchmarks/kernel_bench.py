@@ -4,9 +4,14 @@ On CPU the interpret path measures *correct execution* of the exact TPU
 program (not TPU speed); the derived column reports the achieved
 bandwidth of the jnp reference as the apples-to-apples CPU number and
 the analytic TPU-roofline time for the kernel's traffic.
+
+Emits CSV rows and a machine-readable ``BENCH_kernels.json`` (µs per
+call, modeled HBM bytes, TPU roofline µs per kernel).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -16,6 +21,7 @@ import numpy as np
 from repro.kernels import ops
 
 HBM_BW = 819e9
+BENCH_DIR = os.environ.get("BENCH_DIR", ".")
 
 
 def _time(fn, *args, iters=3):
@@ -29,6 +35,21 @@ def _time(fn, *args, iters=3):
 
 def run(print_fn=print):
     rng = np.random.default_rng(0)
+    report: dict = {}
+
+    def record(name, us, *, hbm_bytes=None, tpu_roofline_us=None,
+               flops=None, note=None):
+        entry = {"us_per_call": us}
+        if hbm_bytes is not None:
+            entry["modeled_hbm_bytes"] = hbm_bytes
+        if tpu_roofline_us is not None:
+            entry["tpu_roofline_us"] = tpu_roofline_us
+        if flops is not None:
+            entry["flops"] = flops
+        if note:
+            entry["note"] = note
+        report[name] = entry
+
     print_fn("name,us_per_call,derived")
 
     # trigger norms: 100 clients × 159k params (paper MNIST scale)
@@ -40,15 +61,28 @@ def run(print_fn=print):
     tpu_us = bytes_moved / HBM_BW * 1e6
     print_fn(f"trigger_norms_ref_jnp,{us_ref:.1f},"
              f"tpu_roofline_us={tpu_us:.1f}")
+    record("trigger_norms_ref_jnp", us_ref, hbm_bytes=bytes_moved,
+           tpu_roofline_us=tpu_us)
 
-    # admm fused update
+    # admm fused update (3-output form; the round uses with_z=False)
     th = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
     la = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
     us_ref = _time(jax.jit(lambda a, b, c: ops.admm_update_ref(a, b, c)),
                    th, la, w)
     bytes_moved = n * d * 4 * 5  # 2 reads + 3 writes (ω cached)
+    tpu_us = bytes_moved / HBM_BW * 1e6
     print_fn(f"admm_update_ref_jnp,{us_ref:.1f},"
-             f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+             f"tpu_roofline_us={tpu_us:.1f}")
+    record("admm_update_ref_jnp", us_ref, hbm_bytes=bytes_moved,
+           tpu_roofline_us=tpu_us)
+    # pre-solve form: λ⁺ + center only, 4 streams instead of 5.  No
+    # measured time — modeled roofline only, so us_per_call stays null.
+    bytes_pre = n * d * 4 * 4
+    report["admm_update_presolve_modeled"] = {
+        "us_per_call": None, "modeled_hbm_bytes": bytes_pre,
+        "tpu_roofline_us": bytes_pre / HBM_BW * 1e6,
+        "note": "with_z=False round form (2 reads + 2 writes)",
+    }
 
     # flash attention (single head-block workload)
     b, h, kvh, s, hd = 1, 8, 2, 1024, 64
@@ -61,6 +95,8 @@ def run(print_fn=print):
     tpu_us = flops / 197e12 * 1e6
     print_fn(f"flash_attention_ref_jnp,{us_ref:.1f},"
              f"tpu_compute_roofline_us={tpu_us:.2f}")
+    record("flash_attention_ref_jnp", us_ref, flops=flops,
+           tpu_roofline_us=tpu_us)
 
     # ssd inter-chunk scan
     bb, c, hh, p, nn = 4, 64, 80, 64, 128
@@ -69,11 +105,34 @@ def run(print_fn=print):
     us_ref = _time(jax.jit(lambda s_, d_: ops.ssd_scan_ref(s_, d_)[0]),
                    states, decays)
     bytes_moved = states.size * 4 * 2
+    tpu_us = bytes_moved / HBM_BW * 1e6
     print_fn(f"ssd_scan_ref_jnp,{us_ref:.1f},"
-             f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+             f"tpu_roofline_us={tpu_us:.1f}")
+    record("ssd_scan_ref_jnp", us_ref, hbm_bytes=bytes_moved,
+           tpu_roofline_us=tpu_us)
 
     # interpret-mode kernels (correctness-path timing, CPU-only number)
     us_k = _time(lambda: ops.trigger_sq_norms(z[:8, :4096], w[:4096],
                                               interpret=True))
     print_fn(f"trigger_norms_pallas_interpret_small,{us_k:.1f},"
              f"interpret_mode=True")
+    record("trigger_norms_pallas_interpret_small", us_k,
+           note="interpret mode (CPU correctness path)")
+
+    us_k = _time(lambda: ops.admm_update(th[:8, :4096], la[:8, :4096],
+                                         w[:4096], interpret=True,
+                                         with_z=False)[0])
+    print_fn(f"admm_update_pallas_interpret_small,{us_k:.1f},"
+             f"interpret_mode=True with_z=False")
+    record("admm_update_pallas_interpret_small", us_k,
+           note="interpret mode, with_z=False (round form)")
+
+    path = os.path.join(BENCH_DIR, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print_fn(f"bench_json,{path},kernels={len(report)}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -1,39 +1,91 @@
 """Round-engine benchmarks: the client-sharded simulation at scale.
 
-Demonstrates the two scaling claims of the device-mesh round engine:
+Demonstrates the scaling claims of the device-mesh round engine:
 
 * one FedBack round at **N ≥ 1000 clients** as a single XLA program
-  (client-stacked vmap; sharded over every available local device via
-  the ``clients`` mesh when more than one is present), and
+  (flat (N, D) client-state layout; sharded over every available local
+  device via the ``clients`` mesh when more than one is present),
+* **participation-proportional compute**: at L̄=0.25, slack=1.5 the
+  capacity-bounded compacted round runs ⌈slack·L̄·N⌉ solver rows per
+  round (≤ 0.5× the dense path's N), with training curves statistically
+  matching the dense engine on the synthetic least-squares workload,
 * a **multi-seed × controller-gain sweep compiled as ONE program**
-  (scan-of-vmap, see ``repro.launch.sweep``) — compile once, then every
-  additional (seed, gain) run rides the same executable.
+  (scan-of-vmap, see ``repro.launch.sweep``).
 
-CSV columns follow kernel_bench: name, value, derived context.
+Emits CSV rows (name, value, derived context) *and* a machine-readable
+``BENCH_round.json`` (wall-clock per round, solver rows per round,
+modeled HBM bytes) — the artifact the perf trajectory tracks.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import ControllerConfig, FLConfig, init_state, make_round_fn
+from repro.core import ControllerConfig, FLConfig, init_state, \
+    make_flat_spec, make_round_fn, run_rounds
+from repro.core.compact import capacity_for
 from repro.data import make_least_squares
 from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
 
+BENCH_DIR = os.environ.get("BENCH_DIR", ".")
 
-def _cfg(n_clients: int, n_points: int) -> FLConfig:
-    return FLConfig(algorithm="fedback", n_clients=n_clients,
-                    participation=0.2, rho=1.0, lr=0.1, momentum=0.0,
-                    epochs=1, batch_size=n_points,
-                    controller=ControllerConfig(K=0.5, alpha=0.9))
+
+def _cfg(n_clients: int, n_points: int, **kw) -> FLConfig:
+    base = dict(algorithm="fedback", n_clients=n_clients,
+                participation=0.2, rho=1.0, lr=0.1, momentum=0.0,
+                epochs=1, batch_size=n_points,
+                controller=ControllerConfig(K=0.5, alpha=0.9))
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _modeled_hbm_bytes(n: int, rows: int, dim: int) -> int:
+    """Per-round fp32 HBM traffic model for the flat client update.
+
+    Server side is irreducibly O(N·D): one trigger read of z_prev, one
+    consensus read, one commit write per state field (3 fields).  The
+    client-side ADMM algebra (λ⁺/center fused pass: 2 reads + 2 writes)
+    and the z assembly (2 reads + 1 write) run over the solver rows
+    only — N rows dense, C rows compacted.
+    """
+    server = (1 + 1 + 3) * n * dim
+    client = (4 + 3) * rows * dim
+    return 4 * (server + client)
+
+
+def _timed_rounds(round_fn, state, rounds: int):
+    """(compile_s, per_round_us, final_state, stacked_metrics).
+
+    Round 0 doubles as the compile warm-up for timing purposes but its
+    metrics are kept — it carries the full-participation burst (and,
+    compacted, the dominant deferral term), so dropping it would skew
+    the reported totals."""
+    t0 = time.perf_counter()
+    state, m0 = jax.block_until_ready(round_fn(state))
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    state, hist = run_rounds(round_fn, state, rounds)
+    hist = jax.device_get(jax.block_until_ready(hist))
+    per_round_us = (time.perf_counter() - t0) / rounds * 1e6
+    m0 = jax.device_get(m0)
+    hist = jax.tree.map(
+        lambda first, rest: np.concatenate(
+            [np.asarray(first)[None], np.asarray(rest)]), m0, hist)
+    return compile_s, per_round_us, state, hist
 
 
 def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
-        dim: int = 64, rounds: int = 5, sweep_clients: int = 256,
+        dim: int = 64, rounds: int = 5, compact_clients: int = 256,
+        compact_rounds: int = 40, sweep_clients: int = 256,
         sweep_seeds: int = 4, sweep_gains: int = 2, sweep_rounds: int = 40):
+    report: dict = {}
     data, params0, loss_fn = make_least_squares(n_clients, n_points, dim)
+    spec = make_flat_spec(params0)
     cfg = _cfg(n_clients, n_points)
 
     # --- N >= 1000 client round (sharded over all local devices) -------
@@ -43,39 +95,103 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
         from repro.sharding.clients import make_client_mesh
         usable = max(d for d in range(1, n_dev + 1) if n_clients % d == 0)
         mesh = make_client_mesh(usable)
-    state = init_state(cfg, params0, mesh=mesh)
-    round_fn = make_round_fn(cfg, loss_fn, data, mesh=mesh)
-
-    t0 = time.perf_counter()
-    state, m = jax.block_until_ready(round_fn(state))
-    compile_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    for _ in range(rounds):
-        state, m = jax.block_until_ready(round_fn(state))
-    per_round_us = (time.perf_counter() - t0) / rounds * 1e6
+    state = init_state(cfg, params0, mesh=mesh, spec=spec)
+    round_fn = make_round_fn(cfg, loss_fn, data, mesh=mesh, spec=spec)
+    compile_s, per_round_us, state, hist = _timed_rounds(
+        round_fn, state, rounds)
     devs = mesh.devices.size if mesh is not None else 1
     print_fn(f"fedback_round_n{n_clients},{per_round_us:.1f},"
              f"devices={devs} compile_s={compile_s:.2f} "
-             f"events_r{rounds}={int(m.num_events)}")
+             f"events_r{rounds}={int(hist.num_events[-1])}")
+    report["dense_flat_n1024"] = {
+        "n_clients": n_clients, "dim": spec.dim, "devices": devs,
+        "per_round_us": per_round_us, "compile_s": compile_s,
+        "solves_per_round": n_clients,
+        "modeled_hbm_bytes_per_round": _modeled_hbm_bytes(
+            n_clients, n_clients, spec.dim),
+    }
+
+    # --- participation-proportional compute: dense vs compacted --------
+    rate, slack = 0.25, 1.5
+    cdata, cparams0, closs = make_least_squares(compact_clients, n_points,
+                                                dim)
+    cspec = make_flat_spec(cparams0)
+    curves = {}
+    for name, compact in (("dense", False), ("compact", True)):
+        ccfg = _cfg(compact_clients, n_points, participation=rate,
+                    compact=compact, capacity_slack=slack)
+        cstate = init_state(ccfg, cparams0, spec=cspec)
+        crf = make_round_fn(ccfg, closs, cdata, spec=cspec)
+        c_s, us, cstate, chist = _timed_rounds(crf, cstate, compact_rounds)
+        solves = (capacity_for(compact_clients, rate, slack) if compact
+                  else compact_clients)
+        curves[name] = np.asarray(chist.train_loss, np.float64)
+        report[name] = {
+            "n_clients": compact_clients, "dim": cspec.dim,
+            "participation": rate, "capacity_slack": slack,
+            "rounds": compact_rounds + 1,  # incl. the warm-up round 0
+            "per_round_us": us, "compile_s": c_s,
+            "solves_per_round": int(solves),
+            "deferred_total": int(np.sum(chist.num_deferred)),
+            "modeled_hbm_bytes_per_round": _modeled_hbm_bytes(
+                compact_clients, solves, cspec.dim),
+            "train_loss_curve": curves[name].tolist(),
+            "final_train_loss": float(curves[name][-1]),
+        }
+        print_fn(f"fedback_{name}_n{compact_clients},{us:.1f},"
+                 f"solves_per_round={int(solves)} "
+                 f"final_loss={curves[name][-1]:.5f}")
+
+    tail = max(compact_rounds // 4, 1)
+    d_tail = float(np.mean(curves["dense"][-tail:]))
+    c_tail = float(np.mean(curves["compact"][-tail:]))
+    ratio = report["compact"]["solves_per_round"] / \
+        report["dense"]["solves_per_round"]
+    rel = abs(c_tail - d_tail) / max(abs(d_tail), 1e-12)
+    report["comparison"] = {
+        "solver_rows_ratio": ratio,
+        "tail_loss_dense": d_tail,
+        "tail_loss_compact": c_tail,
+        "tail_loss_rel_err": rel,
+        "curves_match": bool(rel < 0.1),
+        "speedup_per_round": (report["dense"]["per_round_us"]
+                              / max(report["compact"]["per_round_us"], 1e-9)),
+    }
+    print_fn(f"fedback_compact_vs_dense,{ratio:.3f},"
+             f"tail_loss_rel_err={rel:.4f} "
+             f"speedup={report['comparison']['speedup_per_round']:.2f}x")
 
     # --- sweep: seeds x gains as ONE compiled program -------------------
     grid = SweepGrid(seeds=tuple(range(sweep_seeds)),
                      gains=tuple(1.0 * (i + 1) for i in range(sweep_gains)))
     small = make_least_squares(sweep_clients, n_points, dim)
     scfg = _cfg(sweep_clients, n_points)
+    sspec = make_flat_spec(small[1])
     n_runs = len(grid.runs(scfg))
-    states, overrides, _ = init_sweep(scfg, small[1], grid)
-    sweep_fn = make_sweep_fn(scfg, small[2], small[0], rounds=sweep_rounds)
+    states, overrides, _ = init_sweep(scfg, small[1], grid, spec=sspec)
+    sweep_fn = make_sweep_fn(scfg, small[2], small[0], rounds=sweep_rounds,
+                             spec=sspec)
     t0 = time.perf_counter()
-    final, hist = jax.block_until_ready(sweep_fn(states, overrides))
+    final, shist = jax.block_until_ready(sweep_fn(states, overrides))
     first_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    final, hist = jax.block_until_ready(sweep_fn(states, overrides))
+    final, shist = jax.block_until_ready(sweep_fn(states, overrides))
     steady_s = time.perf_counter() - t0
-    rate = float(jnp.mean(hist.events.astype(jnp.float32)))
+    srate = float(jnp.mean(shist.events.astype(jnp.float32)))
     print_fn(f"fedback_sweep_{n_runs}runs_x{sweep_rounds}rounds,"
              f"{steady_s * 1e6:.1f},one_program=True "
-             f"compile+run_s={first_s:.2f} realized_rate={rate:.3f}")
+             f"compile+run_s={first_s:.2f} realized_rate={srate:.3f}")
+    report["sweep"] = {
+        "runs": n_runs, "rounds": sweep_rounds, "one_program": True,
+        "steady_us": steady_s * 1e6, "compile_plus_run_s": first_s,
+        "realized_rate": srate,
+    }
+
+    path = os.path.join(BENCH_DIR, "BENCH_round.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print_fn(f"bench_json,{path},sections={len(report)}")
+    return report
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@
 import jax
 
 from repro.core import ControllerConfig, FLConfig, init_state, \
-    make_eval_fn, make_round_fn
+    make_eval_fn, make_flat_spec, make_round_fn
 from repro.data import federated_arrays, make_synthetic_mnist
 from repro.models.mlp import (
     init_mlp,
@@ -25,9 +25,11 @@ def main():
         rho=0.01, lr=0.01, epochs=2, batch_size=42,
         controller=ControllerConfig(K=2.0, alpha=0.9))
     params0 = init_mlp(jax.random.PRNGKey(0))
-    state = init_state(cfg, params0)
-    round_fn = make_round_fn(cfg, make_loss_fn(mlp_logits), data)
-    eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits))
+    # flat (N, D) client-state layout: single-pass per-round algebra
+    spec = make_flat_spec(params0)
+    state = init_state(cfg, params0, spec=spec)
+    round_fn = make_round_fn(cfg, make_loss_fn(mlp_logits), data, spec=spec)
+    eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits), spec=spec)
 
     total_events = 0
     print(f"{'round':>5} {'events':>6} {'cum_events':>10} "

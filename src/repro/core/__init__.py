@@ -1,4 +1,10 @@
 """FedBack core — the paper's contribution as composable JAX modules."""
+from repro.utils.flatstate import (  # noqa: F401  (re-export: flat layout)
+    FlatSpec,
+    flatten_problem,
+    make_flat_spec,
+)
+from .compact import CompactPlan, capacity_for, compact_plan  # noqa: F401
 from .controller import (  # noqa: F401
     ControllerConfig,
     ControllerState,

@@ -1,0 +1,158 @@
+"""Capacity-bounded compaction: solver work proportional to L̄·N.
+
+The dense round engine runs the local solver for all N clients and
+throws away the non-participants' work behind an event mask — exact
+event accounting, but O(N) local-solve FLOPs per round regardless of
+the controller's target rate L̄.  This module is the MoE-style dispatch
+that makes round *compute* follow round *participation*:
+
+    1. **plan**    — rank this round's fired clients by trigger distance
+       (stalest first) and assign the top C = ⌈slack·L̄·N⌉ to dense
+       capacity slots; overflow beyond C is *deferred* (the client keeps
+       its state, the event still feeds the controller, and the count is
+       surfaced as ``RoundMetrics.num_deferred``).
+    2. **gather**  — pull the planned clients' rows (θ, λ, data shard,
+       PRNG key) into contiguous (C, ...) buffers.
+    3. **solve**   — run the vmapped scanned SGD prox solver over C rows
+       instead of N.
+    4. **scatter** — write committed rows back into the (N, ...) state;
+       invalid slots (capacity exceeds fired count) drop out via an
+       out-of-bounds scatter index.
+
+Under a ``clients`` device mesh the block runs per-device via
+``shard_map`` with a local capacity ⌈C/devices⌉: gather/solve/scatter
+never cross devices, so the only collective in the round remains the
+consensus mean.  With ``capacity ≥ N`` no client is ever deferred and
+the compacted round reproduces the dense path (bit-identical events,
+fp32-tolerance state) — see tests/test_compact.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_broadcast_like
+
+
+class CompactPlan(NamedTuple):
+    idx: jax.Array  # (C,) int32 — client row feeding each capacity slot
+    valid: jax.Array  # (C,) bool — slot carries a genuinely fired client
+    committed: jax.Array  # (N,) bool — fired AND within capacity
+    num_deferred: jax.Array  # () int32 — fired beyond capacity
+
+
+def capacity_for(n_clients: int, rate: float, slack: float,
+                 capacity: int | None = None, *, n_shards: int = 1) -> int:
+    """Static per-shard capacity C.
+
+    ``capacity`` (if given) is the *global* solver-row budget; otherwise
+    C_global = ⌈slack·L̄·N⌉.  Per shard the budget splits evenly and is
+    clamped to [1, local client count].
+    """
+    total = capacity if capacity is not None else math.ceil(
+        slack * rate * n_clients)
+    n_local = n_clients // n_shards
+    return max(1, min(math.ceil(total / n_shards), n_local))
+
+
+def compact_plan(events: jax.Array, priority: jax.Array,
+                 capacity: int) -> CompactPlan:
+    """Assign fired clients to capacity slots, stalest-first.
+
+    events: (N,) bool; priority: (N,) fp32 (trigger distances — larger
+    means more urgent).  Deterministic: ties break toward the lower
+    client index (stable argsort), so the plan is reproducible and
+    vmap/shard_map friendly.
+    """
+    n = events.shape[0]
+    key = jnp.where(events, -priority.astype(jnp.float32), jnp.inf)
+    order = jnp.argsort(key).astype(jnp.int32)  # fired first, urgent first
+    idx = order[:capacity]
+    num_events = jnp.sum(events.astype(jnp.int32))
+    valid = jnp.arange(capacity, dtype=jnp.int32) < num_events
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    committed = events & (rank < capacity)
+    return CompactPlan(idx=idx, valid=valid, committed=committed,
+                       num_deferred=jnp.maximum(num_events - capacity, 0))
+
+
+def gather_rows(tree, idx):
+    """Pull rows ``idx`` of every (N, ...) leaf into (C, ...) buffers."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def scatter_rows(current, rows, idx, valid):
+    """Write slot rows back into the (N, ...) state; invalid slots are
+    routed to an out-of-bounds index and dropped by the scatter."""
+    n = jax.tree.leaves(current)[0].shape[0]
+    drop_idx = jnp.where(valid, idx, n)
+    return jax.tree.map(
+        lambda c, r: c.at[drop_idx].set(r.astype(c.dtype), mode="drop"),
+        current, rows)
+
+
+def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
+                       *, is_admm: bool, warm_start: bool,
+                       use_admm_kernel: bool = False) -> Callable:
+    """Build the per-shard gather→solve→scatter block.
+
+    solver(theta0, center, x, y, idx) -> (theta, mean_loss), vmapped
+    over capacity slots; epoch_fn(key) -> (steps, batch) gather indices.
+    The block is a pure function of one shard's rows, so the caller can
+    run it directly (single device) or under ``shard_map`` (mesh).
+
+    Returns block(events, distances, theta, lam, z_prev, omega, x, y,
+    keys) -> (theta', lam', z_prev', committed, slot_losses, slot_valid).
+    """
+
+    def block(events, distances, theta, lam, z_prev, omega, x, y, keys):
+        plan = compact_plan(events, distances, capacity)
+        th_rows = gather_rows(theta, plan.idx)
+        lam_rows = gather_rows(lam, plan.idx)
+
+        if is_admm:
+            if use_admm_kernel:
+                from repro.kernels import ops
+                lam_new_rows, center_rows = ops.admm_update(
+                    th_rows, lam_rows, omega, with_z=False)
+            else:
+                from repro.core.engine import dual_ascent, prox_center
+                lam_new_rows = dual_ascent(lam_rows, th_rows, omega)
+                center_rows = prox_center(omega, lam_new_rows)
+        else:
+            lam_new_rows = lam_rows  # stays zero
+            center_rows = tree_broadcast_like(omega, capacity)
+
+        theta0_rows = (tree_broadcast_like(omega, capacity) if warm_start
+                       else th_rows)
+        idx_b = jax.vmap(epoch_fn)(keys[plan.idx])
+        th_out_rows, losses = jax.vmap(solver)(
+            theta0_rows, center_rows, x[plan.idx], y[plan.idx], idx_b)
+        z_rows = (jax.tree.map(jnp.add, th_out_rows, lam_new_rows)
+                  if is_admm else th_out_rows)
+
+        theta_new = scatter_rows(theta, th_out_rows, plan.idx, plan.valid)
+        z_new = scatter_rows(z_prev, z_rows, plan.idx, plan.valid)
+        lam_new = (scatter_rows(lam, lam_new_rows, plan.idx, plan.valid)
+                   if is_admm else lam)
+        return theta_new, lam_new, z_new, plan.committed, losses, plan.valid
+
+    return block
+
+
+def shard_mapped_block(block: Callable, mesh, *,
+                       axis: str = "clients") -> Callable:
+    """Run the compact block per-device over the client mesh axis."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    c, r = P(axis), P()
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(c, c, c, c, c, r, c, c, c),
+        out_specs=(c, c, c, c, c, c),
+        check_rep=False)

@@ -66,8 +66,12 @@ def participant_mean(per_client, events, fallback, num_events=None):
 
     def avg(z, w):
         m = events.reshape((-1,) + (1,) * (z.ndim - 1))
-        s = jnp.sum(jnp.where(m, z, 0.0), axis=0) / denom
-        return jnp.where(num_events > 0, s, w)
+        # accumulate in at-least-fp32 (never truncating f64), result cast
+        # back to the leaf dtype so bf16 states don't silently upcast.
+        acc = jnp.promote_types(z.dtype, jnp.float32)
+        s = (jnp.sum(jnp.where(m, z, 0).astype(acc), axis=0)
+             / denom.astype(acc))
+        return jnp.where(num_events > 0, s.astype(z.dtype), w)
 
     return jax.tree.map(avg, per_client, fallback)
 

@@ -28,10 +28,26 @@ Event decisions are bit-identical to the single-device engine (per-
 client reductions never cross devices); ω matches within fp32 collective
 reduction-order tolerance.
 
-In the *simulation* engine all N local solves are computed and masked —
-the paper's efficiency metric (participation events) is accounted
-exactly, while wall-clock savings appear in the distributed cross-pod
-engine where non-participation suppresses real collective payloads.
+**Participation-proportional compute.**  With ``compact=True`` the
+round's local-solve work scales with the controller's target rate L̄,
+not with N: after selection, the fired clients' rows are gathered into
+dense capacity-C buffers (C = ⌈slack·L̄·N⌉, per-device under the mesh
+via ``shard_map``), the vmapped scanned SGD prox solver runs over C
+rows instead of N, and committed rows are scattered back.  Overflow
+beyond C is deferred (``RoundMetrics.num_deferred``).  The dense path
+(``compact=False``) runs all N solves behind a ``tree_where`` mask and
+remains the bitwise reference for baselines; with ``capacity=N`` the
+two paths agree (bit-identical events, fp32-tolerance state).  See
+``repro.core.compact``.
+
+**Flat layout.**  Pass ``spec=`` (a ``repro.utils.flatstate.FlatSpec``
+built from the params template) and θ, λ, z_prev live as contiguous
+(N, D) fp32 matrices, ω as a (D,) vector: the trigger kernel reads the
+state in place (no per-round concatenate copy) and the ADMM dual/center
+algebra runs as ONE fused Pallas pass (``kernels.admm_update``,
+``use_admm_kernel``) instead of separate λ/z/center HBM sweeps.  The
+local solver unravels one (D,) row back into the model pytree inside
+the vmap, so model code is layout-agnostic.
 """
 from __future__ import annotations
 
@@ -43,10 +59,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim.sgd import sgd_init, sgd_step
+from repro.utils.flatstate import FlatSpec
 from repro.utils.pytree import (
     tree_broadcast_like,
     tree_zeros_like,
 )
+from .compact import capacity_for, make_compact_block, shard_mapped_block
 from .controller import ControllerConfig, init_controller
 from .engine import (
     consensus_mean,
@@ -81,7 +99,13 @@ class FLConfig:
     trigger_metric: str = "l2"
     warm_start: bool = True  # init local solve at ω (paper footnote 2)
     selection: str | None = None  # override; defaults by algorithm
-    use_trigger_kernel: bool = False  # Pallas trigger-norm fast path (l2)
+    use_trigger_kernel: bool | None = False  # Pallas trigger norms (l2);
+    #                               explicit opt-in, None → auto (TPU)
+    use_admm_kernel: bool | None = False  # fused λ⁺/center Pallas pass
+    #            (flat layout only); explicit opt-in, None → auto (TPU)
+    compact: bool = False  # capacity-bounded compaction (core/compact.py)
+    capacity_slack: float = 1.5  # C = ⌈slack·L̄·N⌉ solver rows per round
+    capacity: int | None = None  # explicit global solver-row budget
     seed: int = 0
 
     def selection_name(self) -> str:
@@ -115,16 +139,21 @@ def _ctrl_cfg(cfg: "FLConfig") -> ControllerConfig:
 
 
 def init_state(cfg: FLConfig, params0, *, mesh=None,
-               client_axis: str = "clients") -> FLState:
+               client_axis: str = "clients",
+               spec: FlatSpec | None = None) -> FLState:
     """Alg. 2 initialization: θ_i = z⁰, λ_i = 0, z_i^prev = θ_i, ω = z⁰.
 
     θ, z_prev and ω are materialized as *distinct* buffers (Alg. 2 sets
     them all from z⁰, but aliased or caller-owned buffers would break
     donating the state to the jitted round — donating ω must not delete
     the caller's ``params0``).  With ``mesh`` the stacked state is
-    placed client-sharded across devices.
+    placed client-sharded across devices.  With ``spec`` the state is
+    stored in the flat layout: θ/λ/z_prev as (N, D) fp32 matrices, ω as
+    a (D,) vector (pass the same spec to ``make_round_fn``).
     """
     n = cfg.n_clients
+    if spec is not None:
+        params0 = spec.flatten(params0)
     theta = tree_broadcast_like(params0, n)
     z_prev = tree_broadcast_like(params0, n)  # separate buffers for donation
     ctrl = init_controller(n, _ctrl_cfg(cfg))
@@ -182,9 +211,19 @@ def _local_solve(loss_fn, theta0, center, x, y, idx, *, rho, lr, momentum):
     return theta, jnp.mean(losses)
 
 
+def _resolve_kernel_flag(flag: bool | None) -> bool:
+    """None → auto: Pallas fast paths on TPU, jnp reference elsewhere
+    (interpret-mode kernels validate the program but are slow on CPU)."""
+    return jax.default_backend() == "tpu" if flag is None else flag
+
+
 def _trigger(cfg: FLConfig, state: FLState, mesh, client_axis):
-    """Per-client trigger distances; optionally the Pallas kernel path."""
-    if cfg.use_trigger_kernel and cfg.trigger_metric == "l2":
+    """Per-client trigger distances; optionally the Pallas kernel path.
+
+    Under the flat layout the kernel reads the (N, D) state in place
+    (``trigger_sq_norms_pytree`` detects the single-matrix case)."""
+    if _resolve_kernel_flag(cfg.use_trigger_kernel) \
+            and cfg.trigger_metric == "l2":
         from repro.kernels import ops
         sq = ops.trigger_sq_norms_pytree(
             state.z_prev, state.omega, mesh=mesh, axis=client_axis)
@@ -195,7 +234,7 @@ def _trigger(cfg: FLConfig, state: FLState, mesh, client_axis):
 def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                   *, jit: bool = True, mesh=None,
                   client_axis: str = "clients", donate: bool | None = None,
-                  ctrl_arg: bool = False):
+                  ctrl_arg: bool = False, spec: FlatSpec | None = None):
     """Build the per-round step.
 
     loss_fn(params, x_batch, y_batch) -> scalar mean loss.
@@ -213,12 +252,18 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             ``ctrl_overrides`` is a dict of runtime controller-gain
             overrides (e.g. ``{"K": k, "target_rate": r}``) — the hook
             the batched sweep runner vmaps over.
+    spec:   flat-layout codec (``repro.utils.flatstate.FlatSpec``); the
+            state must come from ``init_state(..., spec=spec)``.  The
+            given ``loss_fn`` still takes the model pytree — it is
+            unravelled per client row inside the vmapped solver.
 
     Returns round_fn(state[, ctrl_overrides]) -> (state, RoundMetrics).
     """
     n = cfg.n_clients
     assert data["x"].shape[0] == n, (data["x"].shape, n)
     n_points = data["x"].shape[1]
+    flat = spec is not None
+    use_admm_kernel = flat and _resolve_kernel_flag(cfg.use_admm_kernel)
     select = make_selection(
         cfg.selection_name(),
         rate=cfg.participation,
@@ -244,6 +289,64 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
 
     solver = partial(_local_solve, loss_fn, rho=rho, lr=cfg.lr,
                      momentum=cfg.momentum)
+    if flat:
+        # Convert at the solver boundary only: unflatten θ⁰/center once
+        # per client, scan the SGD steps in native pytree space (same
+        # per-step codegen as the tree layout), flatten the result.
+        tree_solver = solver
+
+        def solver(theta0_vec, center_vec, x, y, idx):
+            theta, loss = tree_solver(spec.unflatten(theta0_vec),
+                                      spec.unflatten(center_vec), x, y, idx)
+            return spec.flatten(theta), loss
+
+    epoch_fn = partial(_epoch_indices, n_points=n_points,
+                       batch_size=cfg.batch_size, epochs=cfg.epochs)
+
+    if cfg.compact:
+        n_shards = mesh.shape[client_axis] if mesh is not None else 1
+        cap = capacity_for(n, cfg.participation, cfg.capacity_slack,
+                           cfg.capacity, n_shards=n_shards)
+        block = make_compact_block(solver, epoch_fn, cap, is_admm=is_admm,
+                                   warm_start=cfg.warm_start,
+                                   use_admm_kernel=use_admm_kernel)
+        if mesh is not None:
+            block = shard_mapped_block(block, mesh, axis=client_axis)
+
+    def dense_client_update(state, events, data_rng):
+        """All-N solve behind the event mask (the bitwise baseline)."""
+        if is_admm:
+            if use_admm_kernel:
+                from repro.kernels import ops
+                lam_new, center = ops.admm_update(
+                    state.theta, state.lam, state.omega, with_z=False,
+                    mesh=mesh, axis=client_axis)
+            else:
+                lam_new = dual_ascent(state.lam, state.theta, state.omega)
+                center = prox_center(state.omega, lam_new)
+        else:
+            lam_new = state.lam  # stays zero
+            center = tree_broadcast_like(state.omega, n)
+
+        theta_init = (tree_broadcast_like(state.omega, n) if cfg.warm_start
+                      else state.theta)
+        idx = jax.vmap(epoch_fn)(jax.random.split(data_rng, n))
+        theta_out, losses = jax.vmap(solver)(
+            pin(theta_init), pin(center), data["x"], data["y"], pin(idx))
+        theta_out = pin(theta_out)
+
+        z_new = (jax.tree.map(jnp.add, theta_out, lam_new) if is_admm
+                 else theta_out)
+        theta = gated_commit(events, theta_out, state.theta)
+        lam = gated_commit(events, lam_new, state.lam)
+        z_prev = pin(gated_commit(events, z_new, state.z_prev))
+        return theta, lam, z_prev, events, losses, events
+
+    def compact_client_update(state, events, distances, data_rng):
+        """Gather fired rows into capacity slots, solve C rows, scatter."""
+        keys = jax.random.split(data_rng, n)
+        return block(events, distances, state.theta, state.lam,
+                     state.z_prev, state.omega, data["x"], data["y"], keys)
 
     def round_body(state: FLState, ctrl_overrides):
         rng, sel_rng, data_rng = jax.random.split(state.rng, 3)
@@ -253,39 +356,27 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         events, ctrl = select(sel_rng, state, distances,
                               ctrl_overrides=ctrl_overrides)
 
-        # --- client-side computation (vmapped, masked commit) ---------
-        if is_admm:
-            lam_new = dual_ascent(state.lam, state.theta, state.omega)
-            center = prox_center(state.omega, lam_new)
+        # --- client-side computation ----------------------------------
+        if cfg.compact:
+            theta, lam, z_prev, committed, losses, loss_mask = \
+                compact_client_update(state, events, distances, data_rng)
+            z_prev = pin(z_prev)
         else:
-            lam_new = state.lam  # stays zero
-            center = tree_broadcast_like(state.omega, n)
-
-        theta_init = (tree_broadcast_like(state.omega, n) if cfg.warm_start
-                      else state.theta)
-        idx = jax.vmap(
-            lambda k: _epoch_indices(k, n_points, cfg.batch_size, cfg.epochs)
-        )(jax.random.split(data_rng, n))
-        theta_out, losses = jax.vmap(solver)(
-            pin(theta_init), pin(center), data["x"], data["y"], pin(idx))
-        theta_out = pin(theta_out)
-
-        z_new = (jax.tree.map(jnp.add, theta_out, lam_new) if is_admm
-                 else theta_out)
-
-        theta = gated_commit(events, theta_out, state.theta)
-        lam = gated_commit(events, lam_new, state.lam)
-        z_prev = pin(gated_commit(events, z_new, state.z_prev))
+            theta, lam, z_prev, committed, losses, loss_mask = \
+                dense_client_update(state, events, data_rng)
 
         # --- server-side aggregation -----------------------------------
         num_events = jnp.sum(events.astype(jnp.int32))
+        num_committed = jnp.sum(committed.astype(jnp.int32))
         if is_admm:
             # ω^{k+1} = (1/N) Σ_i z_i^prev  (stale entries included, Eq. 2.4)
             omega = consensus_mean(z_prev)
         else:
             # FedAvg/FedProx: non-weighted mean over participants only.
-            omega = participant_mean(z_new, events, state.omega,
-                                     num_events=num_events)
+            # (z_prev carries this round's committed uploads; stale rows
+            # are masked out by ``committed``.)
+            omega = participant_mean(z_prev, committed, state.omega,
+                                     num_events=num_committed)
 
         metrics = RoundMetrics(
             events=events,
@@ -293,7 +384,8 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             distances=distances,
             delta=ctrl.delta,
             load=ctrl.load,
-            train_loss=participant_mean_loss(losses, events),
+            train_loss=participant_mean_loss(losses, loss_mask),
+            num_deferred=num_events - num_committed,
         )
         new_state = FLState(theta=theta, lam=lam, z_prev=z_prev, omega=omega,
                             ctrl=ctrl, rng=rng, round=state.round + 1)
@@ -325,21 +417,35 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                    donate_argnums=donate_argnums)
 
 
-def make_eval_fn(loss_and_acc_fn: Callable, *, jit: bool = True):
-    """loss_and_acc_fn(params, x, y) -> (loss, accuracy) on the server ω."""
+def make_eval_fn(loss_and_acc_fn: Callable, *, jit: bool = True,
+                 spec: FlatSpec | None = None):
+    """loss_and_acc_fn(params, x, y) -> (loss, accuracy) on the server ω.
+
+    With ``spec`` (flat layout) the flat ω is unravelled back into the
+    model pytree before evaluation.
+    """
 
     def eval_fn(state: FLState, x, y):
-        return loss_and_acc_fn(state.omega, x, y)
+        omega = spec.unflatten(state.omega) if spec is not None \
+            else state.omega
+        return loss_and_acc_fn(omega, x, y)
 
     return jax.jit(eval_fn) if jit else eval_fn
 
 
 def run_rounds(round_fn, state: FLState, num_rounds: int):
-    """Python-loop driver returning stacked per-round metrics (host side)."""
+    """Python-loop driver returning stacked per-round metrics.
+
+    Metrics stay on device until the final stack — the loop never calls
+    ``device_get``, so each ``round_fn`` dispatch is asynchronous and
+    donation/async dispatch pipeline across rounds.  The returned
+    metrics pytree has leaves of shape (num_rounds, ...); fetch to host
+    once at the end (``jax.device_get``/``np.asarray``) if needed.
+    """
     history = []
     for _ in range(num_rounds):
         state, m = round_fn(state)
-        history.append(jax.device_get(m))
-    metrics = jax.tree.map(lambda *xs: jnp.stack(
-        [jnp.asarray(x) for x in xs]), *history) if history else None
+        history.append(m)
+    metrics = (jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+               if history else None)
     return state, metrics

@@ -23,6 +23,19 @@ All strategies are pure per-client programs except the permutation-based
 ones (random, round_robin), which need the global client count; under a
 client-sharded mesh GSPMD keeps the permutation replicated and scatters
 the events, so every strategy works unchanged on the sharded engine.
+
+**Capacity interplay.**  Under the compacted engine (``cfg.compact``,
+``repro.core.compact``) the events a strategy emits are *selection*
+decisions: when more clients fire than the round's capacity C, only the
+C stalest (largest trigger distance) commit and the rest are deferred
+(``RoundMetrics.num_deferred``).  The controller keeps measuring the
+raw events — it regulates the trigger, and the integral law drives the
+trigger rate toward L̄ < C/N, so deferral decays from the round-0 burst
+to a shrinking residual.  Deferred clients stay stale and re-fire until
+they win a slot (stalest-first priority guarantees they eventually do),
+which lengthens the transient at large N — carrying deferrals into the
+next round's plan directly is a ROADMAP follow-up.  Strategies need no
+capacity awareness of their own.
 """
 from __future__ import annotations
 

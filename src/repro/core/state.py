@@ -7,6 +7,16 @@ vmap over the axis on a single device, or lay it out over the 1-D
 runs the local solves embarrassingly parallel across devices and the
 consensus mean as a cross-device all-reduce.
 
+**Flat layout (the engine's primary layout).**  When the round is built
+with a ``FlatSpec`` (``repro.utils.flatstate``), θ, λ and z_prev are
+stored as contiguous (N, D) fp32 matrices — a single-leaf pytree each —
+and ω as a (D,) vector.  Every per-round elementwise pass then touches
+exactly one buffer (and the Pallas trigger/ADMM kernels read the state
+in place, no per-round ``concatenate`` copy).  The stacked-pytree
+("tree") layout remains fully supported: FLState fields hold whichever
+layout the state was initialized with, and all generic consumers
+(checkpointing, shardings, tree_map algebra) work on both.
+
 ``CLIENT_STACKED_FIELDS`` names the FLState fields that carry the
 stacked axis; everything else (ω, rng, round) is server-side and stays
 replicated under the mesh layout.
@@ -37,9 +47,11 @@ class FLState(NamedTuple):
 
 
 class RoundMetrics(NamedTuple):
-    events: jax.Array  # (N,) bool — S_i^k
+    events: jax.Array  # (N,) bool — S_i^k (trigger/selection decisions)
     num_events: jax.Array  # () int32
     distances: jax.Array  # (N,) fp32 — ‖ω − z_i^prev‖
     delta: jax.Array  # (N,) fp32 — thresholds after the round
     load: jax.Array  # (N,) fp32 — low-pass participation estimates
     train_loss: jax.Array  # () fp32 — mean local loss among participants
+    num_deferred: jax.Array  # () int32 — fired clients beyond capacity
+    #                          (0 in the dense engine; see core/compact.py)

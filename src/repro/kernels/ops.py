@@ -15,7 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .admm_update import admm_update as _admm_update
+from .admm_update import (
+    admm_update as _admm_update,
+    admm_update_sharded as _admm_update_sharded,
+)
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_scan as _ssd_scan
 from .trigger_norms import (
@@ -33,9 +36,20 @@ def trigger_sq_norms(z_prev, omega, *, interpret: bool | None = None):
     return _trigger_sq_norms(z_prev, omega, interpret=interpret)
 
 
-def admm_update(theta, lam, omega, *, interpret: bool | None = None):
+def admm_update(theta, lam, omega, *, interpret: bool | None = None,
+                with_z: bool = True, mesh=None, axis: str = "clients"):
+    """Fused λ⁺/z/center pass over flat (N, D) client state.
+
+    ``with_z=False`` drops the z output (the flat round's pre-solve
+    form).  With ``mesh`` the kernel runs under ``shard_map`` over the
+    client mesh axis — one launch per device on its local rows.
+    """
     interpret = _default_interpret() if interpret is None else interpret
-    return _admm_update(theta, lam, omega, interpret=interpret)
+    if mesh is not None:
+        return _admm_update_sharded(theta, lam, omega, mesh, axis=axis,
+                                    interpret=interpret, with_z=with_z)
+    return _admm_update(theta, lam, omega, interpret=interpret,
+                        with_z=with_z)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0,
@@ -63,13 +77,19 @@ def trigger_sq_norms_pytree(z_prev_stacked, omega, *,
     launch per device on its local client rows (the axis size must
     divide N).
     """
-    n = jax.tree.leaves(z_prev_stacked)[0].shape[0]
-    z2d = jnp.concatenate(
-        [x.reshape(n, -1).astype(jnp.float32)
-         for x in jax.tree.leaves(z_prev_stacked)], axis=1)
-    w1d = jnp.concatenate(
-        [x.reshape(-1).astype(jnp.float32)
-         for x in jax.tree.leaves(omega)])
+    z_leaves = jax.tree.leaves(z_prev_stacked)
+    w_leaves = jax.tree.leaves(omega)
+    n = z_leaves[0].shape[0]
+    if len(z_leaves) == 1 and z_leaves[0].ndim == 2:
+        # Flat layout: the state already *is* the (N, D) operand — read
+        # it in place instead of paying a concatenate copy per round.
+        z2d = z_leaves[0].astype(jnp.float32)
+        w1d = w_leaves[0].reshape(-1).astype(jnp.float32)
+    else:
+        z2d = jnp.concatenate(
+            [x.reshape(n, -1).astype(jnp.float32) for x in z_leaves], axis=1)
+        w1d = jnp.concatenate(
+            [x.reshape(-1).astype(jnp.float32) for x in w_leaves])
     interpret = _default_interpret() if interpret is None else interpret
     if mesh is not None:
         return _trigger_sq_norms_sharded(z2d, w1d, mesh, axis=axis,

@@ -58,11 +58,15 @@ class SweepGrid:
         return list(itertools.product(self.seeds, gains, targets))
 
 
-def init_sweep(cfg: FLConfig, params0, grid: SweepGrid):
-    """Stacked initial states (runs, N, ...) + runtime ctrl overrides."""
+def init_sweep(cfg: FLConfig, params0, grid: SweepGrid, *, spec=None):
+    """Stacked initial states (runs, N, ...) + runtime ctrl overrides.
+
+    With ``spec`` (a ``repro.utils.flatstate.FlatSpec``) the stacked
+    states use the flat (runs, N, D) layout.
+    """
     runs = grid.runs(cfg)
     states = tree_stack([
-        init_state(dataclasses.replace(cfg, seed=seed), params0)
+        init_state(dataclasses.replace(cfg, seed=seed), params0, spec=spec)
         for seed, _, _ in runs
     ])
     overrides = {
@@ -74,12 +78,15 @@ def init_sweep(cfg: FLConfig, params0, grid: SweepGrid):
 
 def make_sweep_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                   *, rounds: int, jit: bool = True, mesh=None,
-                  client_axis: str = "clients"):
+                  client_axis: str = "clients", spec=None):
     """Build sweep_fn(states, overrides) -> (final_states, history).
 
     states/overrides come from :func:`init_sweep`; leaves carry a
     leading runs axis.  The whole (rounds × runs × clients) program is
-    one jit — XLA sees a single scan-of-vmap and compiles once.
+    one jit — XLA sees a single scan-of-vmap and compiles once.  With
+    ``spec`` the round runs on the flat (N, D) client-state layout
+    (``cfg.compact`` composes: the capacity gather/solve/scatter is
+    vmapped over the run axis like everything else).
     """
     if mesh is not None:
         from repro.sharding.clients import check_divisible, shard_client_data
@@ -87,7 +94,8 @@ def make_sweep_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         # Commit the (run-independent) client shards to the mesh so GSPMD
         # reads them sharded instead of replicating a full copy per device.
         data = shard_client_data(mesh, data, axis=client_axis)
-    round_fn = make_round_fn(cfg, loss_fn, data, jit=False, ctrl_arg=True)
+    round_fn = make_round_fn(cfg, loss_fn, data, jit=False, ctrl_arg=True,
+                             spec=spec)
     vround = jax.vmap(round_fn, in_axes=(0, 0))
 
     def sweep_fn(states, overrides):
@@ -115,14 +123,15 @@ def run_sweep(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
               seeds: Sequence[int] = (0, 1, 2, 3),
               gains: Sequence[float] | None = None,
               target_rates: Sequence[float] | None = None,
-              mesh=None):
+              mesh=None, spec=None):
     """One-call convenience: returns (runs, final_states, history)."""
     grid = SweepGrid(seeds=tuple(seeds),
                      gains=tuple(gains) if gains is not None else None,
                      target_rates=(tuple(target_rates)
                                    if target_rates is not None else None))
-    states, overrides, runs = init_sweep(cfg, params0, grid)
-    sweep_fn = make_sweep_fn(cfg, loss_fn, data, rounds=rounds, mesh=mesh)
+    states, overrides, runs = init_sweep(cfg, params0, grid, spec=spec)
+    sweep_fn = make_sweep_fn(cfg, loss_fn, data, rounds=rounds, mesh=mesh,
+                             spec=spec)
     final_states, history = sweep_fn(states, overrides)
     return runs, final_states, history
 
@@ -138,17 +147,26 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="shard the client axis over this many devices "
                          "(0 = single device)")
+    ap.add_argument("--tree-layout", action="store_true",
+                    help="use the stacked-pytree layout instead of the "
+                         "default flat (N, D) client-state layout")
+    ap.add_argument("--compact", action="store_true",
+                    help="capacity-bounded compaction: solver rows per "
+                         "round follow ⌈slack·L̄·N⌉ instead of N")
     args = ap.parse_args()
 
     import numpy as np
     from repro.core.controller import ControllerConfig
     from repro.data import make_least_squares
+    from repro.utils.flatstate import make_flat_spec
 
     cfg = FLConfig(algorithm="fedback", n_clients=args.n_clients,
                    participation=args.participation, rho=1.0, lr=0.1,
                    momentum=0.0, epochs=2, batch_size=8,
+                   compact=args.compact,
                    controller=ControllerConfig(K=0.2, alpha=0.9))
     data, params0, loss_fn = make_least_squares(args.n_clients)
+    spec = None if args.tree_layout else make_flat_spec(params0)
     seeds = [int(s) for s in args.seeds.split(",")]
     gains = ([float(g) for g in args.gains.split(",")]
              if args.gains else None)
@@ -159,7 +177,7 @@ def main():
 
     runs, final, hist = run_sweep(cfg, loss_fn, data, params0,
                                   rounds=args.rounds, seeds=seeds,
-                                  gains=gains, mesh=mesh)
+                                  gains=gains, mesh=mesh, spec=spec)
     rates = np.asarray(jnp.mean(
         hist.events.astype(jnp.float32), axis=(0, 2)))
     print("seed,K,target,realized_rate,final_train_loss")

@@ -90,7 +90,7 @@ def round_metrics_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
     c = NamedSharding(mesh, spec)
     r = _replicated(mesh)
     return RoundMetrics(events=c, num_events=r, distances=c, delta=c,
-                        load=c, train_loss=r)
+                        load=c, train_loss=r, num_deferred=r)
 
 
 def client_data_shardings(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):

@@ -1,0 +1,102 @@
+"""Flat client-state codec: pytree ⇄ contiguous (N, D) fp32 matrices.
+
+The round engine's client-side algebra (dual ascent, prox centers,
+trigger norms, gated commits) is elementwise over every parameter of
+every client.  Stored as stacked *pytrees*, each per-round pass costs
+one HBM sweep per leaf and the Pallas kernels need a ``jnp.concatenate``
+copy to build their (N, D) operands.  Stored *flat* — one contiguous
+(N, D) fp32 matrix per state field — the same algebra is a single-pass
+kernel over one buffer and the kernels read the state in place.
+
+``FlatSpec`` is the static codec: the leaf layout (treedef, shapes,
+dtypes, offsets) captured once from a template pytree.  It is a frozen,
+hashable dataclass, so it can be closed over by jitted programs without
+retracing and used as a static argument.
+
+Typical use::
+
+    spec = make_flat_spec(params0)
+    state = init_state(cfg, params0, spec=spec)          # flat FLState
+    round_fn = make_round_fn(cfg, loss_fn, data, spec=spec)
+
+The solver unravels one (D,) row back into the model pytree *inside*
+the vmapped local solve (pure reshapes/slices — XLA folds them into the
+surrounding program), so model code never sees the flat layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static description of a pytree's flat (D,) fp32 layout.
+
+    Hashable (usable as a jit static argument): dtypes are stored by
+    name and the treedef by jax's hashable ``PyTreeDef``.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    offsets: tuple[int, ...]
+    dim: int  # total flat width D
+
+    def flatten(self, tree) -> jax.Array:
+        """Pytree (matching the template) → contiguous (D,) fp32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [jnp.asarray(x).astype(jnp.float32).reshape(-1)
+             for x in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(self, vec: jax.Array):
+        """(D,) vector → pytree with the template's shapes and dtypes."""
+        leaves = [
+            jax.lax.slice_in_dim(vec, o, o + int(np.prod(s, dtype=np.int64)))
+            .reshape(s).astype(d)
+            for o, s, d in zip(self.offsets, self.shapes, self.dtypes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def flatten_stacked(self, tree) -> jax.Array:
+        """Stacked pytree (N, ...) leaves → contiguous (N, D) fp32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        n = jax.tree.leaves(tree)[0].shape[0]
+        return jnp.concatenate(
+            [jnp.asarray(x).astype(jnp.float32).reshape(n, -1)
+             for x in leaves], axis=1)
+
+    def unflatten_stacked(self, mat: jax.Array):
+        """(N, D) matrix → stacked pytree with leading axis N."""
+        return jax.vmap(self.unflatten)(mat)
+
+
+def make_flat_spec(template) -> FlatSpec:
+    """Capture the static flat layout of ``template`` (a params pytree)."""
+    leaves, treedef = jax.tree.flatten(template)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype).name for x in leaves)
+    sizes = [int(np.prod(s, dtype=np.int64)) for s in shapes]
+    offsets = tuple(int(o) for o in np.cumsum([0] + sizes[:-1]))
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, dim=int(sum(sizes)))
+
+
+def flat_loss_fn(spec: FlatSpec, loss_fn: Callable) -> Callable:
+    """Adapt ``loss_fn(params_pytree, x, y)`` to flat (D,) parameters."""
+
+    def flat_loss(vec, x, y):
+        return loss_fn(spec.unflatten(vec), x, y)
+
+    return flat_loss
+
+
+def flatten_problem(params0, loss_fn: Callable):
+    """One-call front end: (spec, flat_params0, flat_loss_fn)."""
+    spec = make_flat_spec(params0)
+    return spec, spec.flatten(params0), flat_loss_fn(spec, loss_fn)

@@ -122,3 +122,59 @@ def total_collective_bytes(hlo_text: str, *, world_size: int) -> float:
 def count_op(hlo_text: str, opname: str) -> int:
     """Number of <opname>(...) call sites (not name mentions)."""
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def jaxpr_eqn_counts(jaxpr) -> dict:
+    """Primitive-name → count over a jaxpr, recursing into sub-jaxprs.
+
+    Accepts a ``ClosedJaxpr`` (what ``jax.make_jaxpr`` returns) or a raw
+    ``Jaxpr``.  Descends into every jaxpr-valued equation param (pjit
+    bodies, scan/while/cond branches, custom-call wrappers) so kernels
+    wrapped in nested ``jax.jit`` are still counted — this is what the
+    fused-round op-count assertions use (one Pallas ``pallas_call`` per
+    fused pass, no duplicated elementwise sweeps).
+    """
+    from collections import Counter
+
+    counts: Counter = Counter()
+
+    def visit_param(v):
+        if hasattr(v, "eqns"):  # Jaxpr
+            visit(v)
+        elif hasattr(v, "jaxpr"):  # ClosedJaxpr
+            visit(v.jaxpr)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                visit_param(item)
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                visit_param(v)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return dict(counts)
+
+
+def toplevel_elementwise_shapes(jaxpr, prims=("add", "sub", "mul")) -> list:
+    """Output shapes of top-level elementwise eqns (no sub-jaxpr
+    descent, but pjit bodies are inlined one level).
+
+    Used to assert the flat round has no separate full-width λ/z/center
+    HBM sweeps outside the fused kernel: any surviving top-level
+    add/sub over the whole (N, D) state shows up here.
+    """
+    shapes = []
+
+    def visit(jx, depth):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in prims:
+                shapes.extend(tuple(ov.aval.shape) for ov in eqn.outvars)
+            elif eqn.primitive.name in ("pjit", "closed_call") and depth < 1:
+                for v in eqn.params.values():
+                    if hasattr(v, "jaxpr"):
+                        visit(v.jaxpr, depth + 1)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, 0)
+    return shapes

@@ -1,0 +1,126 @@
+"""Flat client-state codec: pytree ⇄ (N, D) fp32 roundtrips, loss
+adaption, and engine equivalence of the flat layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, FLConfig, init_state, \
+    make_eval_fn, make_round_fn
+from repro.data import make_least_squares
+from repro.models.mlp import init_mlp, make_loss_fn, mlp_logits
+from repro.utils.flatstate import (
+    flat_loss_fn,
+    flatten_problem,
+    make_flat_spec,
+)
+
+
+class TestCodec:
+    def test_roundtrip_mixed_shapes_and_dtypes(self):
+        tree = {
+            "w": jnp.asarray(np.arange(12).reshape(3, 4), jnp.float32),
+            "b": jnp.asarray([1.5, -2.0], jnp.bfloat16),
+            "scale": jnp.asarray(3.0, jnp.float32),
+        }
+        spec = make_flat_spec(tree)
+        assert spec.dim == 12 + 2 + 1
+        vec = spec.flatten(tree)
+        assert vec.shape == (spec.dim,) and vec.dtype == jnp.float32
+        back = spec.unflatten(vec)
+        assert jax.tree.structure(back) == jax.tree.structure(tree)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32))
+
+    def test_stacked_roundtrip(self):
+        params = init_mlp(jax.random.PRNGKey(0), 24, 16, 4)
+        spec = make_flat_spec(params)
+        n = 5
+        stacked = jax.tree.map(
+            lambda x: x[None] + jnp.arange(n, dtype=x.dtype).reshape(
+                (n,) + (1,) * x.ndim), params)
+        mat = spec.flatten_stacked(stacked)
+        assert mat.shape == (n, spec.dim)
+        back = spec.unflatten_stacked(mat)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(stacked)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_spec_is_hashable_static(self):
+        params = init_mlp(jax.random.PRNGKey(0), 8, 8, 2)
+        s1, s2 = make_flat_spec(params), make_flat_spec(params)
+        assert s1 == s2 and hash(s1) == hash(s2)
+
+    def test_row_major_offsets(self):
+        tree = {"a": jnp.ones((2, 3)), "b": jnp.zeros((4,))}
+        spec = make_flat_spec(tree)
+        leaves, _ = jax.tree.flatten(tree)
+        sizes = [x.size for x in leaves]
+        assert list(spec.offsets) == [0, sizes[0]]
+        assert spec.dim == sum(sizes)
+
+
+class TestFlatLoss:
+    def test_loss_and_grad_match_pytree_path(self):
+        params = init_mlp(jax.random.PRNGKey(1), 24, 16, 4)
+        loss = make_loss_fn(mlp_logits)
+        spec, vec0, floss = flatten_problem(params, loss)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(6, 24)),
+                        jnp.float32)
+        y = jnp.asarray([0, 1, 2, 3, 0, 1], jnp.int32)
+        np.testing.assert_allclose(float(floss(vec0, x, y)),
+                                   float(loss(params, x, y)), rtol=1e-6)
+        g_flat = jax.grad(floss)(vec0, x, y)
+        g_tree = jax.grad(loss)(params, x, y)
+        np.testing.assert_allclose(np.asarray(g_flat),
+                                   np.asarray(spec.flatten(g_tree)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_flat_loss_same_fn_as_spec_unflatten(self):
+        params = {"theta": jnp.arange(4, dtype=jnp.float32)}
+        spec = make_flat_spec(params)
+        floss = flat_loss_fn(spec, lambda p, x, y: jnp.sum(p["theta"] * x))
+        out = floss(spec.flatten(params), jnp.ones((4,)), None)
+        assert float(out) == pytest.approx(6.0)
+
+
+class TestFlatEngineEquivalence:
+    def test_flat_round_matches_tree_round(self):
+        n = 6
+        data, params0, ls = make_least_squares(n, 8, 5)
+        cfg = FLConfig(algorithm="fedback", n_clients=n, participation=0.5,
+                       rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
+                       controller=ControllerConfig(K=0.2, alpha=0.9))
+        spec = make_flat_spec(params0)
+
+        def run(spec_arg):
+            state = init_state(cfg, params0, spec=spec_arg)
+            round_fn = make_round_fn(cfg, ls, data, spec=spec_arg)
+            events = []
+            for _ in range(10):
+                state, m = round_fn(state)
+                events.append(np.asarray(m.events).astype(int).tolist())
+            return state, events
+
+        st_tree, ev_tree = run(None)
+        st_flat, ev_flat = run(spec)
+        assert ev_tree == ev_flat  # bit-identical event decisions
+        assert st_flat.theta.shape == (n, spec.dim)
+        assert st_flat.omega.shape == (spec.dim,)
+        np.testing.assert_allclose(
+            np.asarray(st_flat.omega),
+            np.asarray(spec.flatten(st_tree.omega)), rtol=1e-6, atol=1e-7)
+
+    def test_eval_fn_unflattens_flat_omega(self):
+        n = 4
+        data, params0, ls = make_least_squares(n, 8, 5)
+        cfg = FLConfig(n_clients=n, participation=1.0, rho=1.0, lr=0.1,
+                       momentum=0.0, epochs=1, batch_size=8)
+        spec = make_flat_spec(params0)
+        state = init_state(cfg, params0, spec=spec)
+        eval_fn = make_eval_fn(
+            lambda p, x, y: (ls(p, x, y), jnp.zeros(())), spec=spec)
+        loss, _ = eval_fn(state, data["x"][0], data["y"][0])
+        ref = ls(params0, data["x"][0], data["y"][0])
+        np.testing.assert_allclose(float(loss), float(ref), rtol=1e-6)
