@@ -7,14 +7,19 @@ Demonstrates the scaling claims of the device-mesh round engine:
   device via the ``clients`` mesh when more than one is present),
 * **participation-proportional compute**: at L̄=0.25, slack=1.5 the
   capacity-bounded compacted round runs ⌈slack·L̄·N⌉ solver rows per
-  round (≤ 0.5× the dense path's N), with training curves statistically
-  matching the dense engine on the synthetic least-squares workload,
+  round (≤ 0.5× the dense path's N) — state *and* data are gathered
+  through the capacity slots, so the solver-side HBM model scales with
+  C, not N — with training curves statistically matching the dense
+  engine on the synthetic least-squares workload.  The deferral queue
+  makes the compaction lossless (carried overflow, realized adaptive
+  slack reported per section),
 * a **multi-seed × controller-gain sweep compiled as ONE program**
   (scan-of-vmap, see ``repro.launch.sweep``).
 
 Emits CSV rows (name, value, derived context) *and* a machine-readable
 ``BENCH_round.json`` (wall-clock per round, solver rows per round,
-modeled HBM bytes) — the artifact the perf trajectory tracks.
+modeled server/solver HBM bytes from ``repro.launch.roofline``) — the
+artifact the perf trajectory tracks.
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ from repro.core import ControllerConfig, FLConfig, init_state, \
     make_flat_spec, make_round_fn, run_rounds
 from repro.core.compact import capacity_for
 from repro.data import make_least_squares
+from repro.launch.roofline import fedback_round_hbm_bytes
 from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
 
 BENCH_DIR = os.environ.get("BENCH_DIR", ".")
@@ -44,18 +50,13 @@ def _cfg(n_clients: int, n_points: int, **kw) -> FLConfig:
     return FLConfig(**base)
 
 
-def _modeled_hbm_bytes(n: int, rows: int, dim: int) -> int:
-    """Per-round fp32 HBM traffic model for the flat client update.
-
-    Server side is irreducibly O(N·D): one trigger read of z_prev, one
-    consensus read, one commit write per state field (3 fields).  The
-    client-side ADMM algebra (λ⁺/center fused pass: 2 reads + 2 writes)
-    and the z assembly (2 reads + 1 write) run over the solver rows
-    only — N rows dense, C rows compacted.
-    """
-    server = (1 + 1 + 3) * n * dim
-    client = (4 + 3) * rows * dim
-    return 4 * (server + client)
+def _data_bytes_per_client(data) -> int:
+    """fp32 bytes of one client's (x, y) shard — the data the solver
+    streams per capacity slot."""
+    per = 0
+    for leaf in jax.tree.leaves(data):
+        per += int(np.prod(leaf.shape[1:])) * 4
+    return per
 
 
 def _timed_rounds(round_fn, state, rounds: int):
@@ -103,12 +104,17 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
     print_fn(f"fedback_round_n{n_clients},{per_round_us:.1f},"
              f"devices={devs} compile_s={compile_s:.2f} "
              f"events_r{rounds}={int(hist.num_events[-1])}")
+    hbm = fedback_round_hbm_bytes(
+        n_clients, n_clients, spec.dim,
+        data_bytes_per_client=_data_bytes_per_client(data))
     report["dense_flat_n1024"] = {
         "n_clients": n_clients, "dim": spec.dim, "devices": devs,
         "per_round_us": per_round_us, "compile_s": compile_s,
         "solves_per_round": n_clients,
-        "modeled_hbm_bytes_per_round": _modeled_hbm_bytes(
-            n_clients, n_clients, spec.dim),
+        "solver_rows_per_round": n_clients,
+        "modeled_hbm_bytes_per_round": hbm["total_bytes"],
+        "modeled_solver_hbm_bytes_per_round": hbm["solver_bytes"],
+        "modeled_server_hbm_bytes_per_round": hbm["server_bytes"],
     }
 
     # --- participation-proportional compute: dense vs compacted --------
@@ -126,20 +132,34 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
         solves = (capacity_for(compact_clients, rate, slack) if compact
                   else compact_clients)
         curves[name] = np.asarray(chist.train_loss, np.float64)
+        chbm = fedback_round_hbm_bytes(
+            compact_clients, int(solves), cspec.dim,
+            data_bytes_per_client=_data_bytes_per_client(cdata))
         report[name] = {
             "n_clients": compact_clients, "dim": cspec.dim,
             "participation": rate, "capacity_slack": slack,
             "rounds": compact_rounds + 1,  # incl. the warm-up round 0
             "per_round_us": us, "compile_s": c_s,
             "solves_per_round": int(solves),
-            "deferred_total": int(np.sum(chist.num_deferred)),
-            "modeled_hbm_bytes_per_round": _modeled_hbm_bytes(
-                compact_clients, solves, cspec.dim),
+            "solver_rows_per_round": int(solves),
+            # num_deferred is the queue *length* after each round, so the
+            # sum counts client-rounds spent waiting (a client carried k
+            # rounds contributes k), not deferral events.
+            "deferred_client_rounds": int(np.sum(chist.num_deferred)),
+            "queue_depth_final": int(np.asarray(chist.num_deferred)[-1]),
+            "realized_slack_mean": float(
+                np.mean(np.asarray(chist.realized_slack))),
+            "realized_capacity_mean": float(
+                np.mean(np.asarray(chist.realized_capacity))),
+            "modeled_hbm_bytes_per_round": chbm["total_bytes"],
+            "modeled_solver_hbm_bytes_per_round": chbm["solver_bytes"],
+            "modeled_server_hbm_bytes_per_round": chbm["server_bytes"],
             "train_loss_curve": curves[name].tolist(),
             "final_train_loss": float(curves[name][-1]),
         }
         print_fn(f"fedback_{name}_n{compact_clients},{us:.1f},"
                  f"solves_per_round={int(solves)} "
+                 f"realized_slack={report[name]['realized_slack_mean']:.2f} "
                  f"final_loss={curves[name][-1]:.5f}")
 
     tail = max(compact_rounds // 4, 1)
@@ -150,6 +170,9 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
     rel = abs(c_tail - d_tail) / max(abs(d_tail), 1e-12)
     report["comparison"] = {
         "solver_rows_ratio": ratio,
+        "solver_hbm_bytes_ratio": (
+            report["compact"]["modeled_solver_hbm_bytes_per_round"]
+            / report["dense"]["modeled_solver_hbm_bytes_per_round"]),
         "tail_loss_dense": d_tail,
         "tail_loss_compact": c_tail,
         "tail_loss_rel_err": rel,

@@ -23,6 +23,8 @@ def main():
     cfg = FLConfig(
         algorithm="fedback", n_clients=20, participation=0.2,
         rho=0.01, lr=0.01, epochs=2, batch_size=42,
+        compact=True, capacity_slack=1.5,  # solver rows ≤ ⌈slack·L̄·N⌉,
+        # overflow carried by the deferral queue (lossless)
         controller=ControllerConfig(K=2.0, alpha=0.9))
     params0 = init_mlp(jax.random.PRNGKey(0))
     # flat (N, D) client-state layout: single-pass per-round algebra
@@ -33,16 +35,21 @@ def main():
 
     total_events = 0
     print(f"{'round':>5} {'events':>6} {'cum_events':>10} "
-          f"{'mean_delta':>10} {'accuracy':>8}")
+          f"{'mean_delta':>10} {'deferred':>8} {'slack':>6} "
+          f"{'accuracy':>8}")
     for k in range(120):
         state, m = round_fn(state)
         total_events += int(m.num_events)
         if k % 10 == 0 or k == 119:
             loss, acc = eval_fn(state, test["x"], test["y"])
             print(f"{k:5d} {int(m.num_events):6d} {total_events:10d} "
-                  f"{float(m.delta.mean()):10.3f} {float(acc):8.3f}")
+                  f"{float(m.delta.mean()):10.3f} "
+                  f"{int(m.num_deferred):8d} "
+                  f"{float(m.realized_slack):6.2f} {float(acc):8.3f}")
     rate = total_events / (120 * 20)
     print(f"\nrealized participation rate: {rate:.3f} (target 0.2)")
+    print(f"deferral queue at exit: {int(m.num_deferred)} "
+          f"(lossless carry; see docs/compaction.md)")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,15 @@ from repro.utils.flatstate import (  # noqa: F401  (re-export: flat layout)
     flatten_problem,
     make_flat_spec,
 )
-from .compact import CompactPlan, capacity_for, compact_plan  # noqa: F401
+from .compact import (  # noqa: F401
+    CompactPlan,
+    adaptive_limit,
+    capacity_bounds,
+    capacity_for,
+    compact_plan,
+    init_queue,
+    queue_update,
+)
 from .controller import (  # noqa: F401
     ControllerConfig,
     ControllerState,
@@ -22,4 +30,4 @@ from .fedback import (  # noqa: F401
     make_round_fn,
     run_rounds,
 )
-from .state import FLState, RoundMetrics  # noqa: F401
+from .state import DeferQueue, FLState, RoundMetrics  # noqa: F401

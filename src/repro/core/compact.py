@@ -1,4 +1,4 @@
-"""Capacity-bounded compaction: solver work proportional to L̄·N.
+"""Capacity-bounded compaction: lossless, self-tuning solver dispatch.
 
 The dense round engine runs the local solver for all N clients and
 throws away the non-participants' work behind an event mask — exact
@@ -6,25 +6,64 @@ event accounting, but O(N) local-solve FLOPs per round regardless of
 the controller's target rate L̄.  This module is the MoE-style dispatch
 that makes round *compute* follow round *participation*:
 
-    1. **plan**    — rank this round's fired clients by trigger distance
-       (stalest first) and assign the top C = ⌈slack·L̄·N⌉ to dense
-       capacity slots; overflow beyond C is *deferred* (the client keeps
-       its state, the event still feeds the controller, and the count is
-       surfaced as ``RoundMetrics.num_deferred``).
+    1. **plan**    — rank this round's *demand* (fresh trigger events ∪
+       the deferral queue carried from earlier rounds) and assign the
+       top slots up to the round's capacity limit; the rest stays in
+       the queue (``DeferQueue``, part of ``FLState``).
     2. **gather**  — pull the planned clients' rows (θ, λ, data shard,
-       PRNG key) into contiguous (C, ...) buffers.
+       PRNG key) into contiguous (C, ...) buffers — the solver and the
+       fused ADMM kernel touch only C rows of state *and* data.
     3. **solve**   — run the vmapped scanned SGD prox solver over C rows
        instead of N.
     4. **scatter** — write committed rows back into the (N, ...) state;
-       invalid slots (capacity exceeds fired count) drop out via an
+       invalid slots (limit exceeds demand) drop out via an
        out-of-bounds scatter index.
 
+**Deferral queue (lossless carry).**  A client that fired but missed a
+slot is not dropped: it enters the queue (``age = 1``) and is carried
+into every subsequent plan until served, with age-ordered priority —
+a client deferred k rounds outranks every fresh event and every client
+deferred < k rounds, so the plan serves the queue oldest-first and no
+client can starve: with per-round limit C ≥ 1 a deferred client is
+served within ⌈P/C⌉ rounds where P is the queue length when it joined
+(later arrivals are strictly younger and never overtake it).  No unit
+of work is lost or duplicated across rounds:
+
+    demand_k  = events_k ∪ pending_k
+    served_k  = top-C_k of demand_k          (committed)
+    pending_{k+1} = demand_k \\ served_k      (ages += 1)
+
+(a pending client whose trigger re-fires merges into its existing queue
+entry — the carry is a state sync, idempotent by construction).
+
+**Adaptive capacity.**  The static buffer size is C_max = ⌈slack·L̄·N⌉
+(XLA shapes cannot change per round), but the per-round *commit limit*
+C_k adapts to the controller's own load estimate: each client keeps an
+EMA of its demand membership (``DeferQueue.load``, the Eq. 3.4 filter
+applied to fired ∪ pending), and
+
+    C_k = clip(⌈Σ_shard load⌉, ⌈L̄·n_shard⌉, C_max_shard)
+
+so ``slack`` is a *bound*, not a constant — under light load the round
+commits near the L̄·N floor, under bursts it opens up to the slack
+ceiling.  The realized limit is surfaced per round as
+``RoundMetrics.realized_capacity`` / ``realized_slack``.  C_k models
+the *served-row budget* of a deployed server (upload/participation
+bandwidth, the quantity FedBack's Θ(L̄·N) claim is about); the
+simulator itself still executes all C_max slots every round — static
+XLA shapes — so the benchmark HBM model is deliberately parameterized
+by the static C, never by C_k.
+
 Under a ``clients`` device mesh the block runs per-device via
-``shard_map`` with a local capacity ⌈C/devices⌉: gather/solve/scatter
-never cross devices, so the only collective in the round remains the
-consensus mean.  With ``capacity ≥ N`` no client is ever deferred and
-the compacted round reproduces the dense path (bit-identical events,
-fp32-tolerance state) — see tests/test_compact.py.
+``shard_map`` with per-shard budgets that round *up* (the global sum of
+per-shard capacities always covers the global budget — see
+:func:`capacity_for`).  Gather/solve/scatter and the queue itself never
+cross devices — a deferred client is always served by the device owning
+its state row (no-cross-shard-migration invariant) — so the only
+collective in the round remains the consensus mean.  With
+``capacity ≥ N`` no client is ever deferred and the compacted round
+reproduces the dense path (bit-identical events, fp32-tolerance state)
+— see tests/test_compact.py and tests/test_compact_properties.py.
 """
 from __future__ import annotations
 
@@ -36,48 +75,135 @@ import jax.numpy as jnp
 
 from repro.utils.pytree import tree_broadcast_like
 
+from .controller import demand_load_step
+from .state import DeferQueue
+
 
 class CompactPlan(NamedTuple):
     idx: jax.Array  # (C,) int32 — client row feeding each capacity slot
-    valid: jax.Array  # (C,) bool — slot carries a genuinely fired client
-    committed: jax.Array  # (N,) bool — fired AND within capacity
-    num_deferred: jax.Array  # () int32 — fired beyond capacity
+    valid: jax.Array  # (C,) bool — slot carries a genuine demand client
+    committed: jax.Array  # (N,) bool — in demand AND within the limit
+    num_deferred: jax.Array  # () int32 — demand beyond the limit (queue
+    #                          length after this round)
+    demand: jax.Array  # (N,) bool — fresh events ∪ carried deferrals
+    num_demand: jax.Array  # () int32
+    limit: jax.Array  # () int32 — rows this plan may commit (C_k ≤ C)
+
+
+def init_queue(n_clients: int) -> DeferQueue:
+    """Empty queue; load starts at 1 because δ⁰ = 0 makes every client
+    fire in round 0 (paper Alg. 2) — the estimate predicts that burst,
+    so the adaptive limit opens to the slack ceiling immediately."""
+    return DeferQueue(age=jnp.zeros((n_clients,), jnp.int32),
+                      load=jnp.ones((n_clients,), jnp.float32))
 
 
 def capacity_for(n_clients: int, rate: float, slack: float,
                  capacity: int | None = None, *, n_shards: int = 1) -> int:
-    """Static per-shard capacity C.
+    """Static per-shard slot count C.
 
     ``capacity`` (if given) is the *global* solver-row budget; otherwise
-    C_global = ⌈slack·L̄·N⌉.  Per shard the budget splits evenly and is
-    clamped to [1, local client count].
+    C_global = ⌈slack·L̄·N⌉.  The per-shard budget rounds **up**
+    (⌈C_global/n_shards⌉) so the global sum of per-shard capacities
+    never loses remainder clients when C_global is not divisible by the
+    shard count; it is then clamped to [1, local client count] (a shard
+    cannot commit more rows than it owns).
     """
     total = capacity if capacity is not None else math.ceil(
         slack * rate * n_clients)
+    if n_clients % n_shards:
+        raise ValueError(
+            f"n_clients={n_clients} must be divisible by n_shards="
+            f"{n_shards} (equal-size client shards)")
     n_local = n_clients // n_shards
-    return max(1, min(math.ceil(total / n_shards), n_local))
+    per_shard = max(1, min(math.ceil(total / n_shards), n_local))
+    # Rounding up guarantees the global budget is covered (up to the
+    # hard N ceiling — no plan can commit more rows than exist).
+    assert per_shard * n_shards >= min(total, n_clients), \
+        (per_shard, n_shards, total, n_clients)
+    return per_shard
 
 
-def compact_plan(events: jax.Array, priority: jax.Array,
-                 capacity: int) -> CompactPlan:
-    """Assign fired clients to capacity slots, stalest-first.
+def capacity_bounds(n_clients: int, rate: float, slack: float,
+                    capacity: int | None = None, *,
+                    n_shards: int = 1) -> tuple[int, int]:
+    """(C_min, C_max) per shard for the adaptive limit.
+
+    C_max is :func:`capacity_for` (the static slot count); C_min is the
+    participation floor ⌈L̄·n_local⌉ — the adaptive limit may never
+    throttle below the controller's own target throughput.
+    """
+    c_max = capacity_for(n_clients, rate, slack, capacity,
+                         n_shards=n_shards)
+    n_local = n_clients // n_shards
+    c_min = max(1, min(math.ceil(rate * n_local), c_max))
+    return c_min, c_max
+
+
+def adaptive_limit(qload: jax.Array, c_min: int, c_max: int) -> jax.Array:
+    """Per-round commit limit C_k from the shard's demand-load estimate.
+
+    qload: (n_local,) fp32 per-client demand EMAs; their sum estimates
+    this shard's expected solver rows per round.  Returns a traced ()
+    int32 in [c_min, c_max] — the *buffers* stay C_max-sized (static
+    shapes), only the commit mask tightens.
+    """
+    est = jnp.ceil(jnp.sum(qload)).astype(jnp.int32)
+    return jnp.clip(est, c_min, c_max)
+
+
+def compact_plan(events: jax.Array, priority: jax.Array, capacity: int,
+                 *, age: jax.Array | None = None,
+                 limit: jax.Array | int | None = None) -> CompactPlan:
+    """Assign demand (events ∪ queue) to capacity slots.
 
     events: (N,) bool; priority: (N,) fp32 (trigger distances — larger
-    means more urgent).  Deterministic: ties break toward the lower
-    client index (stable argsort), so the plan is reproducible and
-    vmap/shard_map friendly.
+    means more urgent); age: (N,) int32 deferral ages (None ⇒ no queue).
+    Ordering is lexicographic — demand first, then age descending
+    (starvation-freedom: a client deferred k rounds outranks any fresh
+    event and any younger deferral), then priority descending, then
+    client index ascending — fully deterministic, so the plan is
+    reproducible and vmap/shard_map friendly.
+
+    ``limit`` (traced or static, ≤ capacity) caps how many slots may
+    commit this round (adaptive capacity); the slot *buffers* stay
+    ``capacity``-sized.
     """
     n = events.shape[0]
-    key = jnp.where(events, -priority.astype(jnp.float32), jnp.inf)
-    order = jnp.argsort(key).astype(jnp.int32)  # fired first, urgent first
+    if age is None:
+        age = jnp.zeros((n,), jnp.int32)
+    demand = events | (age > 0)
+    # jnp.lexsort: last key is primary; ascending.  Index as the least-
+    # significant key forces the low-index tie-break on every backend.
+    order = jnp.lexsort((jnp.arange(n, dtype=jnp.int32),
+                         -priority.astype(jnp.float32),
+                         -age, ~demand)).astype(jnp.int32)
     idx = order[:capacity]
-    num_events = jnp.sum(events.astype(jnp.int32))
-    valid = jnp.arange(capacity, dtype=jnp.int32) < num_events
+    num_demand = jnp.sum(demand.astype(jnp.int32))
+    lim = jnp.minimum(jnp.asarray(capacity if limit is None else limit,
+                                  jnp.int32), capacity)
+    valid = jnp.arange(capacity, dtype=jnp.int32) < jnp.minimum(num_demand,
+                                                                lim)
     rank = jnp.zeros((n,), jnp.int32).at[order].set(
         jnp.arange(n, dtype=jnp.int32))
-    committed = events & (rank < capacity)
-    return CompactPlan(idx=idx, valid=valid, committed=committed,
-                       num_deferred=jnp.maximum(num_events - capacity, 0))
+    committed = demand & (rank < lim)
+    return CompactPlan(
+        idx=idx, valid=valid, committed=committed,
+        num_deferred=jnp.maximum(num_demand - lim, 0),
+        demand=demand, num_demand=num_demand, limit=lim)
+
+
+def queue_update(queue: DeferQueue, plan: CompactPlan, *,
+                 alpha: float) -> DeferQueue:
+    """Advance the deferral queue one round.
+
+    Served clients leave the queue (age → 0); unserved demand ages by
+    one (fresh overflow enters at age 1).  The demand EMA is the
+    controller low-pass (Eq. 3.4) applied to demand membership.
+    """
+    new_age = jnp.where(plan.demand & ~plan.committed, queue.age + 1, 0)
+    return DeferQueue(age=new_age.astype(jnp.int32),
+                      load=demand_load_step(queue.load, plan.demand, alpha))
 
 
 def gather_rows(tree, idx):
@@ -97,20 +223,33 @@ def scatter_rows(current, rows, idx, valid):
 
 def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
                        *, is_admm: bool, warm_start: bool,
-                       use_admm_kernel: bool = False) -> Callable:
+                       use_admm_kernel: bool = False,
+                       c_min: int | None = None, adaptive: bool = False,
+                       alpha: float = 0.9) -> Callable:
     """Build the per-shard gather→solve→scatter block.
 
     solver(theta0, center, x, y, idx) -> (theta, mean_loss), vmapped
     over capacity slots; epoch_fn(key) -> (steps, batch) gather indices.
-    The block is a pure function of one shard's rows, so the caller can
-    run it directly (single device) or under ``shard_map`` (mesh).
+    With ``adaptive`` the per-round commit limit follows the queue's
+    demand-load estimate within [c_min, capacity]; otherwise the limit
+    is the full ``capacity``.  The block is a pure function of one
+    shard's rows — the deferral queue included, so a deferred client is
+    always served by its own shard — and the caller can run it directly
+    (single device) or under ``shard_map`` (mesh).
 
-    Returns block(events, distances, theta, lam, z_prev, omega, x, y,
-    keys) -> (theta', lam', z_prev', committed, slot_losses, slot_valid).
+    Returns block(events, distances, age, qload, theta, lam, z_prev,
+    omega, x, y, keys) -> (theta', lam', z_prev', age', qload',
+    committed, slot_losses, slot_valid, limit(1,)).
     """
 
-    def block(events, distances, theta, lam, z_prev, omega, x, y, keys):
-        plan = compact_plan(events, distances, capacity)
+    def block(events, distances, age, qload, theta, lam, z_prev, omega,
+              x, y, keys):
+        limit = (adaptive_limit(qload, c_min, capacity)
+                 if adaptive else None)
+        plan = compact_plan(events, distances, capacity, age=age,
+                            limit=limit)
+        queue = queue_update(DeferQueue(age=age, load=qload), plan,
+                             alpha=alpha)
         th_rows = gather_rows(theta, plan.idx)
         lam_rows = gather_rows(lam, plan.idx)
 
@@ -129,9 +268,13 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
 
         theta0_rows = (tree_broadcast_like(omega, capacity) if warm_start
                        else th_rows)
-        idx_b = jax.vmap(epoch_fn)(keys[plan.idx])
+        # Data and PRNG keys flow through the same capacity slots: the
+        # vmapped solver streams C rows of x/y, not N.
+        x_rows = gather_rows(x, plan.idx)
+        y_rows = gather_rows(y, plan.idx)
+        idx_b = jax.vmap(epoch_fn)(gather_rows(keys, plan.idx))
         th_out_rows, losses = jax.vmap(solver)(
-            theta0_rows, center_rows, x[plan.idx], y[plan.idx], idx_b)
+            theta0_rows, center_rows, x_rows, y_rows, idx_b)
         z_rows = (jax.tree.map(jnp.add, th_out_rows, lam_new_rows)
                   if is_admm else th_out_rows)
 
@@ -139,20 +282,28 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
         z_new = scatter_rows(z_prev, z_rows, plan.idx, plan.valid)
         lam_new = (scatter_rows(lam, lam_new_rows, plan.idx, plan.valid)
                    if is_admm else lam)
-        return theta_new, lam_new, z_new, plan.committed, losses, plan.valid
+        return (theta_new, lam_new, z_new, queue.age, queue.load,
+                plan.committed, losses, plan.valid,
+                plan.limit.reshape((1,)))
 
     return block
 
 
 def shard_mapped_block(block: Callable, mesh, *,
                        axis: str = "clients") -> Callable:
-    """Run the compact block per-device over the client mesh axis."""
+    """Run the compact block per-device over the client mesh axis.
+
+    Every input except ω is client-stacked (the deferral queue
+    included — deferred clients never migrate across shards); the
+    per-device commit limits come back stacked (n_shards,) so the
+    caller can sum them into the round's realized capacity.
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     c, r = P(axis), P()
     return shard_map(
         block, mesh=mesh,
-        in_specs=(c, c, c, c, c, r, c, c, c),
-        out_specs=(c, c, c, c, c, c),
+        in_specs=(c, c, c, c, c, c, c, r, c, c, c),
+        out_specs=(c, c, c, c, c, c, c, c, c),
         check_rep=False)

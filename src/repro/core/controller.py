@@ -83,6 +83,20 @@ def controller_step(
     )
 
 
+def demand_load_step(load: jax.Array, demand: jax.Array,
+                     alpha: float) -> jax.Array:
+    """Low-pass demand estimate, the controller filter (Eq. 3.4) reused
+    for solver-row *demand* (fired ∪ pending) instead of raw events.
+
+    The compacted engine (``core/compact.py``) keeps one such EMA per
+    client (``DeferQueue.load``); its per-shard sum is the load estimate
+    that drives the adaptive round capacity.  Like every controller
+    quantity it is a pure per-client map — trivially shardable and
+    vmappable.
+    """
+    return (1.0 - alpha) * load + alpha * demand.astype(jnp.float32)
+
+
 def delta_bounds(cfg: ControllerConfig, delta_plus: float) -> tuple[float, float]:
     """Lemma 1 bounds on δ_i^k, given trigger saturation level δ₊.
 

@@ -30,15 +30,22 @@ reduction-order tolerance.
 
 **Participation-proportional compute.**  With ``compact=True`` the
 round's local-solve work scales with the controller's target rate L̄,
-not with N: after selection, the fired clients' rows are gathered into
-dense capacity-C buffers (C = ⌈slack·L̄·N⌉, per-device under the mesh
-via ``shard_map``), the vmapped scanned SGD prox solver runs over C
-rows instead of N, and committed rows are scattered back.  Overflow
-beyond C is deferred (``RoundMetrics.num_deferred``).  The dense path
+not with N: after selection, this round's *demand* — fresh trigger
+events plus the deferral queue carried from earlier rounds — is
+gathered into dense capacity-C buffers (C = ⌈slack·L̄·N⌉, per-device
+under the mesh via ``shard_map``), the vmapped scanned SGD prox solver
+runs over C rows of state *and data* instead of N, and committed rows
+are scattered back.  Overflow is never dropped: it enters the
+persistent ``DeferQueue`` (part of ``FLState``) with age-ordered,
+starvation-free priority and is served in a later round
+(``RoundMetrics.num_deferred`` is the queue length).  The per-round
+commit limit additionally adapts to the controller's demand-load
+estimate within [⌈L̄·N⌉, C] (``adaptive_capacity``; realized limit in
+``RoundMetrics.realized_capacity``/``realized_slack``).  The dense path
 (``compact=False``) runs all N solves behind a ``tree_where`` mask and
 remains the bitwise reference for baselines; with ``capacity=N`` the
 two paths agree (bit-identical events, fp32-tolerance state).  See
-``repro.core.compact``.
+``repro.core.compact`` and docs/compaction.md.
 
 **Flat layout.**  Pass ``spec=`` (a ``repro.utils.flatstate.FlatSpec``
 built from the params template) and θ, λ, z_prev live as contiguous
@@ -64,7 +71,8 @@ from repro.utils.pytree import (
     tree_broadcast_like,
     tree_zeros_like,
 )
-from .compact import capacity_for, make_compact_block, shard_mapped_block
+from .compact import capacity_bounds, init_queue, make_compact_block, \
+    shard_mapped_block
 from .controller import ControllerConfig, init_controller
 from .engine import (
     consensus_mean,
@@ -106,6 +114,10 @@ class FLConfig:
     compact: bool = False  # capacity-bounded compaction (core/compact.py)
     capacity_slack: float = 1.5  # C = ⌈slack·L̄·N⌉ solver rows per round
     capacity: int | None = None  # explicit global solver-row budget
+    #            (fixes the per-round limit: adaptive capacity is only
+    #             active when the budget is slack-derived)
+    adaptive_capacity: bool = True  # per-round commit limit follows the
+    #            demand-load estimate within [⌈L̄·N⌉, ⌈slack·L̄·N⌉]
     seed: int = 0
 
     def selection_name(self) -> str:
@@ -165,6 +177,7 @@ def init_state(cfg: FLConfig, params0, *, mesh=None,
         ctrl=ctrl,
         rng=jax.random.PRNGKey(cfg.seed),
         round=jnp.zeros((), jnp.int32),
+        queue=init_queue(n),
     )
     if mesh is not None:
         from repro.sharding.clients import check_divisible, fl_state_shardings
@@ -305,11 +318,17 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
 
     if cfg.compact:
         n_shards = mesh.shape[client_axis] if mesh is not None else 1
-        cap = capacity_for(n, cfg.participation, cfg.capacity_slack,
-                           cfg.capacity, n_shards=n_shards)
+        c_min, cap = capacity_bounds(n, cfg.participation,
+                                     cfg.capacity_slack, cfg.capacity,
+                                     n_shards=n_shards)
+        # An explicit budget pins the limit; adaptive capacity only
+        # modulates the slack-derived one.
+        adaptive = cfg.adaptive_capacity and cfg.capacity is None
         block = make_compact_block(solver, epoch_fn, cap, is_admm=is_admm,
                                    warm_start=cfg.warm_start,
-                                   use_admm_kernel=use_admm_kernel)
+                                   use_admm_kernel=use_admm_kernel,
+                                   c_min=c_min, adaptive=adaptive,
+                                   alpha=_ctrl_cfg(cfg).alpha)
         if mesh is not None:
             block = shard_mapped_block(block, mesh, axis=client_axis)
 
@@ -343,10 +362,11 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         return theta, lam, z_prev, events, losses, events
 
     def compact_client_update(state, events, distances, data_rng):
-        """Gather fired rows into capacity slots, solve C rows, scatter."""
+        """Gather demand rows into capacity slots, solve C rows, scatter."""
         keys = jax.random.split(data_rng, n)
-        return block(events, distances, state.theta, state.lam,
-                     state.z_prev, state.omega, data["x"], data["y"], keys)
+        return block(events, distances, state.queue.age, state.queue.load,
+                     state.theta, state.lam, state.z_prev, state.omega,
+                     data["x"], data["y"], keys)
 
     def round_body(state: FLState, ctrl_overrides):
         rng, sel_rng, data_rng = jax.random.split(state.rng, 3)
@@ -358,16 +378,27 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
 
         # --- client-side computation ----------------------------------
         if cfg.compact:
-            theta, lam, z_prev, committed, losses, loss_mask = \
+            (theta, lam, z_prev, q_age, q_load, committed, losses,
+             loss_mask, limits) = \
                 compact_client_update(state, events, distances, data_rng)
             z_prev = pin(z_prev)
+            queue = state.queue._replace(age=q_age, load=q_load)
+            # Σ over shards of the per-device commit limits (shape
+            # (n_shards,) under the mesh, (1,) on a single device).
+            realized_capacity = jnp.sum(limits)
+            num_deferred = jnp.sum((q_age > 0).astype(jnp.int32))
         else:
             theta, lam, z_prev, committed, losses, loss_mask = \
                 dense_client_update(state, events, data_rng)
+            queue = state.queue
+            realized_capacity = jnp.asarray(n, jnp.int32)
+            num_deferred = None  # num_events - num_committed (= 0) below
 
         # --- server-side aggregation -----------------------------------
         num_events = jnp.sum(events.astype(jnp.int32))
         num_committed = jnp.sum(committed.astype(jnp.int32))
+        if num_deferred is None:
+            num_deferred = num_events - num_committed
         if is_admm:
             # ω^{k+1} = (1/N) Σ_i z_i^prev  (stale entries included, Eq. 2.4)
             omega = consensus_mean(z_prev)
@@ -378,6 +409,7 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             omega = participant_mean(z_prev, committed, state.omega,
                                      num_events=num_committed)
 
+        rate_floor = cfg.participation * n
         metrics = RoundMetrics(
             events=events,
             num_events=num_events,
@@ -385,10 +417,14 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             delta=ctrl.delta,
             load=ctrl.load,
             train_loss=participant_mean_loss(losses, loss_mask),
-            num_deferred=num_events - num_committed,
+            num_deferred=num_deferred,
+            realized_capacity=realized_capacity,
+            realized_slack=(realized_capacity.astype(jnp.float32)
+                            / (rate_floor if rate_floor > 0 else 1.0)),
         )
         new_state = FLState(theta=theta, lam=lam, z_prev=z_prev, omega=omega,
-                            ctrl=ctrl, rng=rng, round=state.round + 1)
+                            ctrl=ctrl, rng=rng, round=state.round + 1,
+                            queue=queue)
         return new_state, metrics
 
     if ctrl_arg:

@@ -26,16 +26,17 @@ the events, so every strategy works unchanged on the sharded engine.
 
 **Capacity interplay.**  Under the compacted engine (``cfg.compact``,
 ``repro.core.compact``) the events a strategy emits are *selection*
-decisions: when more clients fire than the round's capacity C, only the
-C stalest (largest trigger distance) commit and the rest are deferred
-(``RoundMetrics.num_deferred``).  The controller keeps measuring the
-raw events — it regulates the trigger, and the integral law drives the
-trigger rate toward L̄ < C/N, so deferral decays from the round-0 burst
-to a shrinking residual.  Deferred clients stay stale and re-fire until
-they win a slot (stalest-first priority guarantees they eventually do),
-which lengthens the transient at large N — carrying deferrals into the
-next round's plan directly is a ROADMAP follow-up.  Strategies need no
-capacity awareness of their own.
+decisions: when this round's demand (fresh events plus the carried
+deferral queue) exceeds the round's commit limit, the overflow enters
+the persistent ``DeferQueue`` and is served in a later round with
+age-ordered, starvation-free priority — a deferred client does not
+need to re-fire; it is carried into every subsequent plan until served
+(``RoundMetrics.num_deferred`` is the queue length).  The controller
+keeps measuring the raw events — it regulates the trigger, and the
+integral law drives the trigger rate toward L̄ ≤ C/N, so the queue
+drains from the round-0 burst with per-client wait bounded by ⌈N/C⌉
+rounds regardless of N.  Strategies need no capacity awareness of
+their own.
 """
 from __future__ import annotations
 

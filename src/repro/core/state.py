@@ -30,10 +30,28 @@ import jax
 from .controller import ControllerState
 
 #: FLState fields whose leaves carry the leading (N, ...) client axis.
-CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev")
+CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev", "queue")
 
 #: ControllerState fields with a per-client (N,) vector.
 CTRL_STACKED_FIELDS = ("delta", "load", "event_count")
+
+
+class DeferQueue(NamedTuple):
+    """Persistent deferral queue of the compacted engine (core/compact.py).
+
+    Clients that fired but overflowed the round's capacity are *carried*
+    into the next round's plan instead of waiting to re-trigger.  Both
+    fields are per-client (N,) vectors, so the queue is shard-local
+    under the ``clients`` mesh by construction — a deferred client is
+    always served by the device that owns its state row (documented
+    no-cross-shard-migration invariant; see docs/compaction.md).
+    """
+
+    age: jax.Array  # (N,) int32 — rounds spent deferred; 0 = not pending.
+    #                 Monotone +1 per unserved round, reset on commit.
+    load: jax.Array  # (N,) fp32 — EMA of demand membership (fired ∪
+    #                  pending); Σ over a shard estimates that shard's
+    #                  per-round solver-row demand (adaptive capacity).
 
 
 class FLState(NamedTuple):
@@ -44,6 +62,10 @@ class FLState(NamedTuple):
     ctrl: ControllerState  # participation controller (inert for random selection)
     rng: jax.Array  # PRNG key advanced once per round
     round: jax.Array  # () int32
+    queue: Any = None  # DeferQueue — compaction carry state (zeros/ones
+    #                    at init; passed through unchanged by the dense
+    #                    engine).  Optional for hand-built states in
+    #                    tests; init_state always materializes it.
 
 
 class RoundMetrics(NamedTuple):
@@ -53,5 +75,13 @@ class RoundMetrics(NamedTuple):
     delta: jax.Array  # (N,) fp32 — thresholds after the round
     load: jax.Array  # (N,) fp32 — low-pass participation estimates
     train_loss: jax.Array  # () fp32 — mean local loss among participants
-    num_deferred: jax.Array  # () int32 — fired clients beyond capacity
-    #                          (0 in the dense engine; see core/compact.py)
+    num_deferred: jax.Array  # () int32 — deferral-queue length after the
+    #                          round (demand − served; 0 in the dense
+    #                          engine; see core/compact.py)
+    realized_capacity: jax.Array  # () int32 — solver rows the round was
+    #                               allowed to commit (Σ over shards of
+    #                               the adaptive per-device limit; N on
+    #                               the dense path)
+    realized_slack: jax.Array  # () fp32 — realized_capacity / (L̄·N),
+    #                            the round's effective capacity slack
+    #                            (1/L̄ on the dense path)

@@ -29,6 +29,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def admm_update_hbm_bytes(rows: int, dim: int, *, with_z: bool = True,
+                          dtype_bytes: int = 4) -> int:
+    """Modeled HBM traffic of one fused pass over ``rows`` client rows.
+
+    One read each of θ and λ, one (amortized) read of the ω tile, one
+    write per output — 5 streams with z, 4 without.  ``rows`` is the
+    lever: the compacted round engine feeds the kernel C = ⌈slack·L̄·N⌉
+    gathered rows instead of N, so the modeled bytes (and the measured
+    wall-clock) scale with the capacity, not the client count.
+    """
+    n_out = 3 if with_z else 2
+    return dtype_bytes * ((2 + n_out) * rows * dim + dim)
+
+
 def _kernel3(th_ref, la_ref, w_ref, lam_out, z_out, c_out):
     th = th_ref[...]
     la = la_ref[...]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from . import ref
 from .admm_update import (
     admm_update as _admm_update,
+    admm_update_hbm_bytes,  # noqa: F401  (re-export: traffic model)
     admm_update_sharded as _admm_update_sharded,
 )
 from .flash_attention import flash_attention as _flash_attention

@@ -65,6 +65,52 @@ def roofline_terms(cost: dict[str, Any], hlo_text: str, *,
     }
 
 
+def fedback_round_hbm_bytes(n_clients: int, solver_rows: int, dim: int,
+                            *, data_bytes_per_client: int = 0,
+                            dtype_bytes: int = 4) -> dict[str, int]:
+    """Modeled per-round HBM traffic of the flat FedBack round engine.
+
+    The server side is irreducibly O(N·D): one trigger read of z_prev,
+    one consensus read, and one commit write per state field (θ, λ,
+    z_prev).  Everything client-side flows through the capacity slots —
+    ``solver_rows`` is N on the dense path and C = ⌈slack·L̄·N⌉ (the
+    realized adaptive limit at most) on the compacted path:
+
+    * the fused λ⁺/center pass (``kernels.admm_update``, with_z=False
+      form: 2 reads + 2 writes per row),
+    * the post-solve z = θ_out + λ⁺ assembly (2 reads + 1 write),
+    * the gathered data shards (``data_bytes_per_client`` per row) —
+      the solver streams C rows of x/y, not N.
+
+    Returns the separate server/solver terms plus the total, so the
+    benchmark can show the solver term scaling with C while the server
+    term stays pinned at N.
+    """
+    server = (1 + 1 + 3) * n_clients * dim * dtype_bytes
+    from repro.kernels.admm_update import admm_update_hbm_bytes
+    solver_state = (admm_update_hbm_bytes(solver_rows, dim, with_z=False,
+                                          dtype_bytes=dtype_bytes)
+                    + 3 * solver_rows * dim * dtype_bytes)
+    solver_data = solver_rows * data_bytes_per_client
+    return {
+        "server_bytes": server,
+        "solver_state_bytes": solver_state,
+        "solver_data_bytes": solver_data,
+        "solver_bytes": solver_state + solver_data,
+        "total_bytes": server + solver_state + solver_data,
+    }
+
+
+def fedback_round_memory_s(n_clients: int, solver_rows: int, dim: int,
+                           *, data_bytes_per_client: int = 0,
+                           dtype_bytes: int = 4) -> float:
+    """Memory roofline term (seconds) of one flat FedBack round."""
+    return fedback_round_hbm_bytes(
+        n_clients, solver_rows, dim,
+        data_bytes_per_client=data_bytes_per_client,
+        dtype_bytes=dtype_bytes)["total_bytes"] / HBM_BW
+
+
 def summarize(record: dict) -> str:
     r = record
     t = r["roofline"]

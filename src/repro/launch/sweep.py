@@ -21,7 +21,12 @@ for random-selection baselines sweep seeds only.
 
 With ``mesh=`` the client axis (dim 1 of every stacked leaf) is
 additionally sharded over a ``clients`` device mesh — sweeps and client
-scaling compose.
+scaling compose.  So does capacity-bounded compaction (``cfg.compact``):
+the deferral queue and demand-load EMA live inside ``FLState``
+(``FLState.queue``), so they thread through the scan-of-vmap as regular
+(runs, N) carry state — every run keeps its own independent queue and
+adaptive capacity limit, and ``history.num_deferred`` /
+``history.realized_slack`` come back per run.
 
 CLI demo (quadratic problem, prints per-run realized rates):
 
@@ -152,7 +157,11 @@ def main():
                          "default flat (N, D) client-state layout")
     ap.add_argument("--compact", action="store_true",
                     help="capacity-bounded compaction: solver rows per "
-                         "round follow ⌈slack·L̄·N⌉ instead of N")
+                         "round follow ⌈slack·L̄·N⌉ instead of N "
+                         "(lossless — overflow is queue-carried)")
+    ap.add_argument("--slack", type=float, default=1.5,
+                    help="capacity slack bound (adaptive limit lives in "
+                         "[⌈L̄·N⌉, ⌈slack·L̄·N⌉])")
     args = ap.parse_args()
 
     import numpy as np
@@ -163,7 +172,7 @@ def main():
     cfg = FLConfig(algorithm="fedback", n_clients=args.n_clients,
                    participation=args.participation, rho=1.0, lr=0.1,
                    momentum=0.0, epochs=2, batch_size=8,
-                   compact=args.compact,
+                   compact=args.compact, capacity_slack=args.slack,
                    controller=ControllerConfig(K=0.2, alpha=0.9))
     data, params0, loss_fn = make_least_squares(args.n_clients)
     spec = None if args.tree_layout else make_flat_spec(params0)
@@ -180,10 +189,13 @@ def main():
                                   gains=gains, mesh=mesh, spec=spec)
     rates = np.asarray(jnp.mean(
         hist.events.astype(jnp.float32), axis=(0, 2)))
-    print("seed,K,target,realized_rate,final_train_loss")
-    for (seed, k, tgt), rate, loss in zip(
-            runs, rates, np.asarray(hist.train_loss[-1])):
-        print(f"{seed},{k},{tgt},{rate:.3f},{loss:.5f}")
+    slacks = np.asarray(jnp.mean(hist.realized_slack, axis=0))
+    queues = np.asarray(hist.num_deferred[-1])
+    print("seed,K,target,realized_rate,realized_slack,queue_depth,"
+          "final_train_loss")
+    for (seed, k, tgt), rate, slk, q, loss in zip(
+            runs, rates, slacks, queues, np.asarray(hist.train_loss[-1])):
+        print(f"{seed},{k},{tgt},{rate:.3f},{slk:.2f},{int(q)},{loss:.5f}")
 
 
 if __name__ == "__main__":

@@ -57,8 +57,9 @@ def fl_state_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
                        batched: bool = False):
     """Prefix-pytree of shardings for :class:`repro.core.state.FLState`.
 
-    Client-stacked subtrees (θ, λ, z_prev and the per-client controller
-    vectors) shard their leading axis over ``axis``; server-side state
+    Client-stacked subtrees (θ, λ, z_prev, the deferral queue and the
+    per-client controller vectors) shard their leading axis over
+    ``axis``; server-side state
     (ω, rng, round counters) is replicated.  With ``batched=True`` the
     leaves carry an extra leading sweep axis (see ``repro.launch.sweep``)
     which stays replicated while the client axis (now dim 1) is sharded.
@@ -90,7 +91,8 @@ def round_metrics_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
     c = NamedSharding(mesh, spec)
     r = _replicated(mesh)
     return RoundMetrics(events=c, num_events=r, distances=c, delta=c,
-                        load=c, train_loss=r, num_deferred=r)
+                        load=c, train_loss=r, num_deferred=r,
+                        realized_capacity=r, realized_slack=r)
 
 
 def client_data_shardings(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):

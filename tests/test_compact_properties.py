@@ -1,0 +1,236 @@
+"""Property layer over the compaction subsystem (core/compact.py).
+
+Runs with real hypothesis when installed (CI: fixed --hypothesis-seed)
+and with the executing mini-hypothesis fallback otherwise — these tests
+never skip; they are the invariant lock that makes the compaction
+subsystem safe to keep refactoring:
+
+* **conservation** — across any round sequence, no unit of work is lost
+  or duplicated: served ⊎ carried = demand, exactly;
+* **age monotonicity** — deferral age increases by exactly 1 per
+  unserved round and resets on service;
+* **starvation-freedom** — at the tightest capacity (slack=1.0) every
+  demand client is served within ⌈N/C⌉ rounds;
+* **capacity bounds** — the adaptive limit lives in [⌈L̄·N⌉, ⌈slack·L̄·N⌉]
+  and per-shard budgets always cover the global one;
+* **scatter/gather round-trip** — identity on committed rows, untouched
+  state elsewhere.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DeferQueue
+from repro.core.compact import (
+    adaptive_limit,
+    capacity_bounds,
+    capacity_for,
+    compact_plan,
+    gather_rows,
+    init_queue,
+    queue_update,
+    scatter_rows,
+)
+
+
+def _random_rounds(rng, n, rounds, fire_p):
+    """(rounds, N) bool fresh-event stream."""
+    return rng.random((rounds, n)) < fire_p
+
+
+def _play(events_seq, distances_seq, n, capacity, *, limit=None,
+          alpha=0.9):
+    """Drive plan → queue_update over a round sequence; yield per-round
+    (plan, pending_before, queue_after)."""
+    queue = init_queue(n)
+    out = []
+    for events, dist in zip(events_seq, distances_seq):
+        pending = np.asarray(queue.age) > 0
+        plan = compact_plan(jnp.asarray(events), jnp.asarray(dist),
+                            capacity, age=queue.age, limit=limit)
+        queue = queue_update(queue, plan, alpha=alpha)
+        out.append((plan, pending, queue))
+    return out
+
+
+class TestConservation:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(2, 24), cap_frac=st.floats(0.1, 1.0),
+           fire_p=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_no_event_lost_or_duplicated(self, n, cap_frac, fire_p, seed):
+        """served ⊎ carried = demand at every round; a pending client is
+        carried until served and never re-enters as a duplicate."""
+        rng = np.random.default_rng(seed)
+        capacity = max(1, int(round(cap_frac * n)))
+        rounds = 12
+        events_seq = _random_rounds(rng, n, rounds, fire_p)
+        dist_seq = rng.random((rounds, n)).astype(np.float32)
+        for plan, pending, queue in _play(events_seq, dist_seq, n,
+                                          capacity):
+            demand = np.asarray(plan.demand)
+            committed = np.asarray(plan.committed)
+            carried = np.asarray(queue.age) > 0
+            # demand is exactly fresh events ∪ carry — nothing else
+            # may be served (no duplication of completed work)
+            assert not np.any(committed & ~demand)
+            # partition: every demand client is either served now or
+            # carried to the next round (no loss), never both
+            np.testing.assert_array_equal(committed | carried, demand)
+            assert not np.any(committed & carried)
+            assert int(plan.num_deferred) == int(carried.sum())
+            # pending clients from the previous round are still demand
+            assert np.all(demand[pending])
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(2, 20), seed=st.integers(0, 2**31 - 1))
+    def test_committed_count_is_min_demand_limit(self, n, seed):
+        rng = np.random.default_rng(seed)
+        events = rng.random(n) < 0.7
+        dist = rng.random(n).astype(np.float32)
+        age = (rng.integers(0, 3, n)).astype(np.int32)
+        capacity = max(1, n // 2)
+        limit = int(rng.integers(1, capacity + 1))
+        plan = compact_plan(jnp.asarray(events), jnp.asarray(dist),
+                            capacity, age=jnp.asarray(age),
+                            limit=jnp.asarray(limit))
+        committed = int(np.asarray(plan.committed).sum())
+        assert committed == min(int(plan.num_demand), limit)
+        assert int(np.asarray(plan.valid).sum()) == committed
+
+
+class TestAgeMonotonicity:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(2, 16), fire_p=st.floats(0.2, 1.0),
+           seed=st.integers(0, 2**31 - 1))
+    def test_age_increments_until_served_then_resets(self, n, fire_p,
+                                                     seed):
+        rng = np.random.default_rng(seed)
+        capacity = max(1, n // 3)
+        rounds = 10
+        events_seq = _random_rounds(rng, n, rounds, fire_p)
+        dist_seq = rng.random((rounds, n)).astype(np.float32)
+        prev_age = np.zeros(n, np.int32)
+        for plan, _, queue in _play(events_seq, dist_seq, n, capacity):
+            age = np.asarray(queue.age)
+            demand = np.asarray(plan.demand)
+            committed = np.asarray(plan.committed)
+            unserved = demand & ~committed
+            np.testing.assert_array_equal(age[unserved],
+                                          prev_age[unserved] + 1)
+            assert np.all(age[~unserved] == 0)
+            prev_age = age
+
+
+class TestStarvationFreedom:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(4, 32), rate=st.floats(0.1, 0.6),
+           fire_p=st.floats(0.3, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_bounded_service_at_tightest_slack(self, n, rate, fire_p,
+                                               seed):
+        """Acceptance: at slack=1.0 (C = ⌈L̄·N⌉, the tightest capacity)
+        every client entering demand is served within ⌈N/C⌉ rounds, for
+        an adversarial random event stream."""
+        rng = np.random.default_rng(seed)
+        capacity = capacity_for(n, rate, 1.0)
+        bound = math.ceil(n / capacity)
+        rounds = 4 * bound + 8
+        events_seq = _random_rounds(rng, n, rounds, fire_p)
+        dist_seq = rng.random((rounds, n)).astype(np.float32)
+        waiting = np.full(n, -1)  # rounds spent in demand, -1 = idle
+        for plan, _, _ in _play(events_seq, dist_seq, n, capacity):
+            demand = np.asarray(plan.demand)
+            committed = np.asarray(plan.committed)
+            waiting = np.where(demand & (waiting < 0), 0, waiting)
+            assert np.all(waiting[demand] <= bound), \
+                (waiting.max(), bound, capacity)
+            waiting = np.where(committed, -1,
+                               np.where(demand, waiting + 1, waiting))
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(4, 24), seed=st.integers(0, 2**31 - 1))
+    def test_deferred_outranks_fresh(self, n, seed):
+        """A deferred client outranks every fresh event regardless of
+        trigger distance (age-ordered priority)."""
+        rng = np.random.default_rng(seed)
+        events = np.ones(n, bool)
+        dist = rng.random(n).astype(np.float32)
+        age = np.zeros(n, np.int32)
+        stale = int(rng.integers(0, n))
+        age[stale] = int(rng.integers(1, 5))
+        dist[stale] = 0.0  # smallest distance — age must still win
+        plan = compact_plan(jnp.asarray(events), jnp.asarray(dist), 1,
+                            age=jnp.asarray(age))
+        assert int(plan.idx[0]) == stale
+        assert bool(plan.committed[stale])
+
+
+class TestCapacityBounds:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(2, 64), rate=st.floats(0.05, 1.0),
+           slack=st.floats(1.0, 3.0), seed=st.integers(0, 2**31 - 1))
+    def test_adaptive_limit_within_bounds(self, n, rate, slack, seed):
+        rng = np.random.default_rng(seed)
+        c_min, c_max = capacity_bounds(n, rate, slack)
+        assert math.ceil(rate * n) >= c_min or c_min == c_max
+        assert 1 <= c_min <= c_max <= n
+        qload = jnp.asarray(rng.random(n).astype(np.float32) * 2.0)
+        lim = int(adaptive_limit(qload, c_min, c_max))
+        assert c_min <= lim <= c_max
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_local=st.integers(1, 32), n_shards=st.sampled_from([1, 2, 3,
+                                                                 4, 8]),
+           rate=st.floats(0.05, 1.0), slack=st.floats(1.0, 2.5))
+    def test_per_shard_budgets_cover_global(self, n_local, n_shards, rate,
+                                            slack):
+        """Regression (per-shard split): the rounded-up per-shard budget
+        summed over shards always covers the global C (up to the hard N
+        ceiling), for any non-divisible slack·L̄·N."""
+        n = n_local * n_shards
+        c_global = math.ceil(slack * rate * n)
+        per_shard = capacity_for(n, rate, slack, n_shards=n_shards)
+        assert per_shard * n_shards >= min(c_global, n)
+        assert 1 <= per_shard <= n_local
+        # (the concrete ⌈5/4⌉ remainder regression lives in
+        # tests/test_compact.py::test_capacity_for_per_shard_rounds_up)
+
+
+class TestScatterGatherRoundTrip:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(2, 16), d=st.integers(1, 8),
+           fire_p=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_identity_on_committed_rows(self, n, d, fire_p, seed):
+        rng = np.random.default_rng(seed)
+        events = jnp.asarray(rng.random(n) < fire_p)
+        dist = jnp.asarray(rng.random(n).astype(np.float32))
+        capacity = max(1, n // 2)
+        plan = compact_plan(events, dist, capacity)
+        tree = {"w": jnp.asarray(rng.standard_normal((n, d)),
+                                 jnp.float32),
+                "b": jnp.asarray(rng.standard_normal((n,)), jnp.float32)}
+        rows = gather_rows(tree, plan.idx)
+        back = scatter_rows(tree, rows, plan.idx, plan.valid)
+        # gather → scatter of untouched rows is the identity everywhere
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]))
+        # modified rows land exactly on the committed clients
+        bumped = {k: r + 1.0 for k, r in rows.items()}
+        out = scatter_rows(tree, bumped, plan.idx, plan.valid)
+        committed = np.asarray(plan.committed)
+        for k in tree:
+            diff = (np.asarray(out[k]) != np.asarray(tree[k]))
+            changed = np.any(diff.reshape(n, -1), axis=1)
+            np.testing.assert_array_equal(changed, committed)
+
+
+class TestQueueStateDefaults:
+    def test_init_queue_predicts_round_zero_burst(self):
+        q = init_queue(5)
+        assert isinstance(q, DeferQueue)
+        np.testing.assert_array_equal(np.asarray(q.age), 0)
+        np.testing.assert_array_equal(np.asarray(q.load), 1.0)
+        # load=1 per client ⇒ the adaptive limit opens to the ceiling
+        assert int(adaptive_limit(q.load, 2, 4)) == 4

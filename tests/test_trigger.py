@@ -1,0 +1,62 @@
+"""Event-trigger unit tests: the three distance metrics (Remark 3), the
+threshold semantics, and the kernel-free reference path used by every
+engine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.trigger import evaluate_trigger, trigger_distances
+
+
+def _stacked(z):
+    return {"w": jnp.asarray(z, jnp.float32)}
+
+
+class TestTriggerDistances:
+    def setup_method(self):
+        self.omega = {"w": jnp.asarray([3.0, 0.0], jnp.float32)}
+        self.z = _stacked([[0.0, 4.0],  # diff (3, -4): l2=5, linf=4
+                           [3.0, 0.0]])  # diff 0
+
+    def test_l2(self):
+        d = trigger_distances(self.omega, self.z, "l2")
+        np.testing.assert_allclose(np.asarray(d), [5.0, 0.0], atol=1e-6)
+
+    def test_linf(self):
+        d = trigger_distances(self.omega, self.z, "linf")
+        np.testing.assert_allclose(np.asarray(d), [4.0, 0.0], atol=1e-6)
+
+    def test_cosine_scales_by_z_norm(self):
+        d = trigger_distances(self.omega, self.z, "cosine")
+        np.testing.assert_allclose(np.asarray(d)[0], 5.0 / 4.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(d)[1], 0.0, atol=1e-5)
+
+    def test_unknown_metric_raises(self):
+        with pytest.raises(ValueError, match="unknown trigger metric"):
+            trigger_distances(self.omega, self.z, "l1")
+
+    def test_multi_leaf_pytree_accumulates(self):
+        omega = {"a": jnp.zeros((2,), jnp.float32),
+                 "b": jnp.zeros((2,), jnp.float32)}
+        z = {"a": jnp.full((3, 2), 1.0, jnp.float32),
+             "b": jnp.full((3, 2), 2.0, jnp.float32)}
+        d = trigger_distances(omega, z, "l2")
+        np.testing.assert_allclose(np.asarray(d),
+                                   np.sqrt(2 * 1.0 + 2 * 4.0), atol=1e-6)
+        d_inf = trigger_distances(omega, z, "linf")
+        np.testing.assert_allclose(np.asarray(d_inf), 2.0, atol=1e-6)
+
+
+class TestEvaluateTrigger:
+    def test_fires_at_or_above_threshold(self):
+        events = evaluate_trigger(jnp.asarray([1.0, 2.0, 3.0]),
+                                  jnp.asarray([2.0, 2.0, 2.0]))
+        np.testing.assert_array_equal(np.asarray(events),
+                                      [False, True, True])
+
+    def test_negative_delta_always_fires(self):
+        """Lemma 1 dynamics drive δ negative to force participation."""
+        events = evaluate_trigger(jnp.zeros((3,)),
+                                  jnp.asarray([-0.1, -5.0, 0.0]))
+        np.testing.assert_array_equal(np.asarray(events),
+                                      [True, True, True])
