@@ -1,0 +1,294 @@
+"""Bench-regression gate: diff fresh benchmark artifacts against the
+committed baselines.
+
+The perf trajectory of the round engine is tracked by two
+machine-readable artifacts — ``BENCH_round.json`` (round wall-clock,
+solver rows, modeled HBM split, async overlap) and ``BENCH_kernels.json``
+(per-kernel µs + modeled traffic).  This module is the CI gate that
+keeps them honest:
+
+* **wall-clock** — any section's ``per_round_us`` regressing more than
+  ``--tolerance`` (default 15%) against the committed baseline fails;
+* **solver rows** — ``solver_rows_per_round`` may never increase: the
+  participation-proportional compute claim is monotone by construction,
+  so any increase is a planner/capacity bug, not noise;
+* **kernels** — modeled HBM bytes may never increase (deterministic),
+  µs compared under the looser ``--kernel-tolerance`` (interpret-mode
+  CPU timings are noisy);
+* **async parity** — the fresh report's ``async_parity`` flag (the
+  staleness-0 pipeline tracking the synchronous engine) must hold.
+
+Wall-clock legs only run when the fresh artifacts carry the same
+``_env`` fingerprint (jax version / backend / machine) as the
+baselines — cross-machine absolute timings differ by more than any
+tolerance, so on a mismatch the timing checks are skipped with a
+visible note (``--force-wallclock`` overrides) while the deterministic
+checks above still gate.  Same policy as the golden traces.
+
+Two entry modes::
+
+    python -m benchmarks.compare --schema-only   # tier-1: baselines well-formed
+    python -m benchmarks.compare                 # nightly: fresh vs baselines
+
+The nightly ``slow-compiles`` job runs the full diff right after the
+benchmark artifacts are produced and uploaded; the tier-1 job runs the
+schema check so a malformed baseline commit is caught on every push
+without paying for a benchmark run.  Baselines live in
+``benchmarks/baselines/`` and are regenerated intentionally by running
+the benchmarks with ``BENCH_DIR=benchmarks/baselines``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import os
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+ROUND_JSON = "BENCH_round.json"
+KERNELS_JSON = "BENCH_kernels.json"
+
+#: BENCH_round.json sections every report must carry, with the keys the
+#: gate reads from each.  Extra sections/keys are always allowed — the
+#: schema pins the gate's inputs, not the report's full shape.
+ROUND_SCHEMA = {
+    "dense_flat_n1024": ("per_round_us", "solver_rows_per_round"),
+    "dense": ("per_round_us", "solver_rows_per_round"),
+    "compact": ("per_round_us", "solver_rows_per_round"),
+    "compact_async_s0": ("per_round_us", "solver_rows_per_round"),
+    "compact_async_s2": ("per_round_us", "solver_rows_per_round",
+                         "modeled_overlap_speedup"),
+    "comparison": ("solver_rows_ratio", "speedup_per_round"),
+    "async_parity": ("s0_matches_sync_compact",),
+    "sweep": ("steady_us",),
+}
+
+
+class Gate:
+    """Accumulates findings; renders a readable verdict table."""
+
+    def __init__(self):
+        self.failures: list[str] = []
+        self.notes: list[str] = []
+
+    def fail(self, msg: str) -> None:
+        self.failures.append(msg)
+
+    def ok(self, msg: str) -> None:
+        self.notes.append(msg)
+
+    def report(self, print_fn=print) -> int:
+        for n in self.notes:
+            print_fn(f"  ok   {n}")
+        for f in self.failures:
+            print_fn(f"  FAIL {f}")
+        verdict = "FAIL" if self.failures else "PASS"
+        print_fn(f"bench-compare,{verdict},"
+                 f"failures={len(self.failures)} checks="
+                 f"{len(self.notes) + len(self.failures)}")
+        return 1 if self.failures else 0
+
+
+def _load(path: str, gate: Gate, *, required: bool):
+    if not os.path.exists(path):
+        if required:
+            gate.fail(f"missing artifact: {path}")
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        gate.fail(f"unreadable artifact {path}: {e}")
+        return None
+
+
+def check_round_schema(report: dict, gate: Gate, *, label: str) -> None:
+    for section, keys in ROUND_SCHEMA.items():
+        entry = report.get(section)
+        if not isinstance(entry, dict):
+            gate.fail(f"{label}: section '{section}' missing")
+            continue
+        for key in keys:
+            val = entry.get(key)
+            if isinstance(val, bool):
+                continue  # parity flags
+            if not isinstance(val, numbers.Real):
+                gate.fail(f"{label}: {section}.{key} missing or "
+                          f"non-numeric ({val!r})")
+            elif key.endswith("_us") and val <= 0:
+                gate.fail(f"{label}: {section}.{key} must be positive, "
+                          f"got {val}")
+    if not gate.failures:
+        gate.ok(f"{label}: schema ({len(ROUND_SCHEMA)} sections)")
+
+
+def check_kernels_schema(report: dict, gate: Gate, *, label: str) -> None:
+    if not isinstance(report, dict) or not report:
+        gate.fail(f"{label}: empty or non-dict kernel report")
+        return
+    bad = [k for k, v in report.items()
+           if not k.startswith("_")  # metadata (e.g. _env fingerprint)
+           and (not isinstance(v, dict)
+                or not (v.get("us_per_call") is None  # modeled-only rows
+                        or isinstance(v.get("us_per_call"), numbers.Real)))]
+    if bad:
+        gate.fail(f"{label}: kernels missing numeric us_per_call: {bad}")
+    else:
+        gate.ok(f"{label}: schema ({len(report)} kernels)")
+
+
+def wallclock_comparable(base: dict | None, fresh: dict | None,
+                         gate: Gate, *, label: str,
+                         force: bool) -> bool:
+    """Timings are only meaningful on a matching env fingerprint.
+
+    The committed baselines carry the machine they were measured on
+    (``_env``); on a different jaxlib/arch/backend the absolute
+    wall-clock differs by far more than any regression tolerance, so
+    the timing legs are skipped (with a visible note) and only the
+    deterministic checks — solver rows, modeled bytes, parity flags,
+    schema — gate the run.  ``--force-wallclock`` overrides (e.g. for
+    pinned self-hosted runners); baselines regenerated on the CI runner
+    class re-enable the timing legs automatically."""
+    b_env = (base or {}).get("_env")
+    f_env = (fresh or {}).get("_env")
+    if force or (b_env is not None and b_env == f_env):
+        return True
+    gate.ok(f"{label}: wall-clock legs skipped — env mismatch "
+            f"(baseline {b_env!r}, fresh {f_env!r}); deterministic "
+            "checks still gate")
+    return False
+
+
+def compare_round(base: dict, fresh: dict, gate: Gate, *,
+                  tolerance: float, wallclock: bool = True) -> None:
+    for section, entry in base.items():
+        if not isinstance(entry, dict):
+            continue
+        fresh_entry = fresh.get(section)
+        if not isinstance(fresh_entry, dict):
+            gate.fail(f"round: section '{section}' vanished from the "
+                      "fresh report")
+            continue
+        b_us, f_us = entry.get("per_round_us"), \
+            fresh_entry.get("per_round_us")
+        if wallclock and isinstance(b_us, numbers.Real) and b_us > 0:
+            if not isinstance(f_us, numbers.Real):
+                gate.fail(f"round: {section}.per_round_us missing fresh")
+            elif f_us > b_us * (1.0 + tolerance):
+                gate.fail(
+                    f"round: {section} wall-clock regressed "
+                    f"{f_us / b_us - 1.0:+.1%} "
+                    f"({b_us:.0f} -> {f_us:.0f} us, tol "
+                    f"{tolerance:.0%})")
+            else:
+                gate.ok(f"round: {section} per_round_us "
+                        f"{f_us / b_us - 1.0:+.1%}")
+        b_rows = entry.get("solver_rows_per_round")
+        f_rows = fresh_entry.get("solver_rows_per_round")
+        if isinstance(b_rows, numbers.Real):
+            if not isinstance(f_rows, numbers.Real):
+                gate.fail(f"round: {section}.solver_rows_per_round "
+                          "missing fresh")
+            elif f_rows > b_rows:
+                gate.fail(
+                    f"round: {section} solver rows increased "
+                    f"{b_rows} -> {f_rows} (any increase fails)")
+            else:
+                gate.ok(f"round: {section} solver rows {f_rows} <= "
+                        f"{b_rows}")
+    parity = fresh.get("async_parity", {})
+    if parity.get("s0_matches_sync_compact") is not True:
+        gate.fail("round: async_parity.s0_matches_sync_compact is not "
+                  "true in the fresh report")
+    else:
+        gate.ok("round: staleness-0 pipeline tracks the synchronous "
+                "engine")
+
+
+def compare_kernels(base: dict, fresh: dict, gate: Gate, *,
+                    tolerance: float, wallclock: bool = True) -> None:
+    for name, entry in base.items():
+        if name.startswith("_") or not isinstance(entry, dict):
+            continue  # metadata (e.g. _env fingerprint)
+        fresh_entry = fresh.get(name)
+        if not isinstance(fresh_entry, dict):
+            gate.fail(f"kernels: '{name}' vanished from the fresh report")
+            continue
+        b_bytes = entry.get("modeled_hbm_bytes")
+        f_bytes = fresh_entry.get("modeled_hbm_bytes")
+        if isinstance(b_bytes, numbers.Real) \
+                and isinstance(f_bytes, numbers.Real) and f_bytes > b_bytes:
+            gate.fail(f"kernels: {name} modeled HBM bytes increased "
+                      f"{b_bytes} -> {f_bytes}")
+        b_us, f_us = entry.get("us_per_call"), \
+            fresh_entry.get("us_per_call")
+        if wallclock and isinstance(b_us, numbers.Real) and b_us > 0 \
+                and isinstance(f_us, numbers.Real):
+            if f_us > b_us * (1.0 + tolerance):
+                gate.fail(f"kernels: {name} regressed "
+                          f"{f_us / b_us - 1.0:+.1%} ({b_us:.0f} -> "
+                          f"{f_us:.0f} us, tol {tolerance:.0%})")
+            else:
+                gate.ok(f"kernels: {name} {f_us / b_us - 1.0:+.1%}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="directory of the committed baseline artifacts")
+    ap.add_argument("--fresh-dir", default=os.environ.get("BENCH_DIR", "."),
+                    help="directory of the freshly produced artifacts "
+                         "(default: $BENCH_DIR or .)")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="per-round wall-clock regression tolerance "
+                         "(fraction; default 0.15)")
+    ap.add_argument("--kernel-tolerance", type=float, default=0.5,
+                    help="kernel microbench regression tolerance "
+                         "(looser: interpret-mode CPU timings)")
+    ap.add_argument("--schema-only", action="store_true",
+                    help="validate the committed baselines' schema and "
+                         "exit (no fresh artifacts needed — the fast "
+                         "tier-1 check)")
+    ap.add_argument("--force-wallclock", action="store_true",
+                    help="compare timings even when the baseline's env "
+                         "fingerprint differs from the fresh run's "
+                         "(for pinned self-hosted runners)")
+    args = ap.parse_args(argv)
+
+    gate = Gate()
+    base_round = _load(os.path.join(args.baseline_dir, ROUND_JSON), gate,
+                       required=True)
+    base_kernels = _load(os.path.join(args.baseline_dir, KERNELS_JSON),
+                         gate, required=True)
+    if base_round is not None:
+        check_round_schema(base_round, gate, label="baseline round")
+    if base_kernels is not None:
+        check_kernels_schema(base_kernels, gate, label="baseline kernels")
+
+    if not args.schema_only:
+        fresh_round = _load(os.path.join(args.fresh_dir, ROUND_JSON), gate,
+                            required=True)
+        fresh_kernels = _load(os.path.join(args.fresh_dir, KERNELS_JSON),
+                              gate, required=True)
+        if base_round is not None and fresh_round is not None:
+            check_round_schema(fresh_round, gate, label="fresh round")
+            compare_round(base_round, fresh_round, gate,
+                          tolerance=args.tolerance,
+                          wallclock=wallclock_comparable(
+                              base_round, fresh_round, gate,
+                              label="round", force=args.force_wallclock))
+        if base_kernels is not None and fresh_kernels is not None:
+            compare_kernels(base_kernels, fresh_kernels, gate,
+                            tolerance=args.kernel_tolerance,
+                            wallclock=wallclock_comparable(
+                                base_kernels, fresh_kernels, gate,
+                                label="kernels",
+                                force=args.force_wallclock))
+
+    return gate.report()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -127,6 +127,10 @@ def run(print_fn=print):
     record("admm_update_pallas_interpret_small", us_k,
            note="interpret mode, with_z=False (round form)")
 
+    import platform
+    report["_env"] = (f"jax={jax.__version__};"
+                      f"backend={jax.default_backend()};"
+                      f"machine={platform.machine()}")
     path = os.path.join(BENCH_DIR, "BENCH_kernels.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=2)

@@ -35,10 +35,21 @@ from repro.core import ControllerConfig, FLConfig, init_state, \
     make_flat_spec, make_round_fn, run_rounds
 from repro.core.compact import capacity_for
 from repro.data import make_least_squares
-from repro.launch.roofline import fedback_round_hbm_bytes
+from repro.launch.roofline import fedback_async_overlap, \
+    fedback_round_hbm_bytes
 from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
 
 BENCH_DIR = os.environ.get("BENCH_DIR", ".")
+
+
+def _env_fingerprint() -> str:
+    """Environment the wall-clock numbers were measured on — the
+    bench-regression gate only compares timings on a matching
+    fingerprint (same guard as the golden traces); rows/bytes/parity
+    are compared unconditionally."""
+    import platform
+    return (f"jax={jax.__version__};backend={jax.default_backend()};"
+            f"machine={platform.machine()}")
 
 
 def _cfg(n_clients: int, n_points: int, **kw) -> FLConfig:
@@ -59,13 +70,20 @@ def _data_bytes_per_client(data) -> int:
     return per
 
 
-def _timed_rounds(round_fn, state, rounds: int):
+def _timed_rounds(round_fn, state, rounds: int, *, repeats: int = 1):
     """(compile_s, per_round_us, final_state, stacked_metrics).
 
     Round 0 doubles as the compile warm-up for timing purposes but its
     metrics are kept — it carries the full-participation burst (and,
     compacted, the dominant deferral term), so dropping it would skew
-    the reported totals."""
+    the reported totals.  ``repeats`` re-times additional passes
+    (continuing from the evolved state — same compiled program) and
+    reports the **minimum** per-round time: small rounds are a couple
+    of ms on CPU, where a single pass is scheduler-noise-dominated and
+    would flake the ±15% bench-regression gate; the min over passes is
+    the standard noise-robust wall-clock estimator.  Metrics come from
+    the first pass only, so the reported trajectories stay those of
+    rounds 0..rounds."""
     t0 = time.perf_counter()
     state, m0 = jax.block_until_ready(round_fn(state))
     compile_s = time.perf_counter() - t0
@@ -73,6 +91,12 @@ def _timed_rounds(round_fn, state, rounds: int):
     state, hist = run_rounds(round_fn, state, rounds)
     hist = jax.device_get(jax.block_until_ready(hist))
     per_round_us = (time.perf_counter() - t0) / rounds * 1e6
+    for _ in range(repeats - 1):
+        t0 = time.perf_counter()
+        state, extra = run_rounds(round_fn, state, rounds)
+        jax.block_until_ready(extra)
+        per_round_us = min(per_round_us,
+                           (time.perf_counter() - t0) / rounds * 1e6)
     m0 = jax.device_get(m0)
     hist = jax.tree.map(
         lambda first, rest: np.concatenate(
@@ -99,7 +123,7 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
     state = init_state(cfg, params0, mesh=mesh, spec=spec)
     round_fn = make_round_fn(cfg, loss_fn, data, mesh=mesh, spec=spec)
     compile_s, per_round_us, state, hist = _timed_rounds(
-        round_fn, state, rounds)
+        round_fn, state, rounds, repeats=3)
     devs = mesh.devices.size if mesh is not None else 1
     print_fn(f"fedback_round_n{n_clients},{per_round_us:.1f},"
              f"devices={devs} compile_s={compile_s:.2f} "
@@ -128,7 +152,9 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
                     compact=compact, capacity_slack=slack)
         cstate = init_state(ccfg, cparams0, spec=cspec)
         crf = make_round_fn(ccfg, closs, cdata, spec=cspec)
-        c_s, us, cstate, chist = _timed_rounds(crf, cstate, compact_rounds)
+        c_s, us, cstate, chist = _timed_rounds(crf, cstate,
+                                               compact_rounds,
+                                               repeats=3)
         solves = (capacity_for(compact_clients, rate, slack) if compact
                   else compact_clients)
         curves[name] = np.asarray(chist.train_loss, np.float64)
@@ -184,6 +210,67 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
              f"tail_loss_rel_err={rel:.4f} "
              f"speedup={report['comparison']['speedup_per_round']:.2f}x")
 
+    # --- stale-tolerant rounds: bounded-staleness commit pipeline ------
+    # Same compacted workload with solves allowed to land up to S rounds
+    # late; the consensus average runs every round over the freshest
+    # available z-rows.  Solver rows per round are unchanged (the async
+    # pipeline changes *when* results commit, never how many solves
+    # run), so the bench-regression gate's no-solver-row-increase check
+    # applies to these rows too.
+    for staleness in (0, 2):
+        acfg = _cfg(compact_clients, n_points, participation=rate,
+                    compact=True, capacity_slack=slack,
+                    max_staleness=staleness)
+        astate = init_state(acfg, cparams0, spec=cspec)
+        arf = make_round_fn(acfg, closs, cdata, spec=cspec)
+        a_s, a_us, astate, ahist = _timed_rounds(
+            arf, astate, compact_rounds, repeats=3)
+        solves = capacity_for(compact_clients, rate, slack)
+        overlap = fedback_async_overlap(
+            compact_clients, int(solves), cspec.dim,
+            max_staleness=staleness,
+            data_bytes_per_client=_data_bytes_per_client(cdata))
+        curve = np.asarray(ahist.train_loss, np.float64)
+        name = f"compact_async_s{staleness}"
+        report[name] = {
+            "n_clients": compact_clients, "dim": cspec.dim,
+            "participation": rate, "capacity_slack": slack,
+            "max_staleness": staleness,
+            "rounds": compact_rounds + 1,
+            "per_round_us": a_us, "compile_s": a_s,
+            "solves_per_round": int(solves),
+            "solver_rows_per_round": int(solves),
+            "landed_per_round_mean": float(
+                np.mean(np.asarray(ahist.num_landed))),
+            "inflight_depth_mean": float(
+                np.mean(np.asarray(ahist.num_inflight))),
+            "queue_depth_final": int(np.asarray(ahist.num_deferred)[-1]),
+            "modeled_sync_s": overlap["modeled_sync_s"],
+            "modeled_async_s": overlap["modeled_async_s"],
+            "modeled_overlap_speedup": overlap["modeled_overlap_speedup"],
+            "train_loss_curve": curve.tolist(),
+            "final_train_loss": float(curve[-1]),
+        }
+        print_fn(f"fedback_{name}_n{compact_clients},{a_us:.1f},"
+                 f"landed/round={report[name]['landed_per_round_mean']:.1f} "
+                 f"inflight={report[name]['inflight_depth_mean']:.1f} "
+                 f"modeled_overlap="
+                 f"{overlap['modeled_overlap_speedup']:.2f}x "
+                 f"final_loss={curve[-1]:.5f}")
+    # staleness=0 must track the synchronous compacted engine exactly
+    # (bit-identical events ⇒ identical loss curve) — surfaced so the
+    # nightly compare job would catch an async-parity regression as a
+    # benchmark diff even before the test suite runs.
+    report["async_parity"] = {
+        "s0_matches_sync_compact": bool(np.allclose(
+            np.asarray(report["compact_async_s0"]["train_loss_curve"]),
+            np.asarray(report["compact"]["train_loss_curve"]),
+            rtol=1e-6, atol=1e-7)),
+    }
+    print_fn(f"fedback_async_parity,"
+             f"{int(report['async_parity']['s0_matches_sync_compact'])},"
+             f"staleness0_equals_sync")
+
     # --- sweep: seeds x gains as ONE compiled program -------------------
     grid = SweepGrid(seeds=tuple(range(sweep_seeds)),
                      gains=tuple(1.0 * (i + 1) for i in range(sweep_gains)))
@@ -197,9 +284,13 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
     t0 = time.perf_counter()
     final, shist = jax.block_until_ready(sweep_fn(states, overrides))
     first_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    final, shist = jax.block_until_ready(sweep_fn(states, overrides))
-    steady_s = time.perf_counter() - t0
+    # min over repeats: the steady_us row feeds the 15%-tolerance
+    # bench-regression gate, so a single noise-dominated pass won't do.
+    steady_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        final, shist = jax.block_until_ready(sweep_fn(states, overrides))
+        steady_s = min(steady_s, time.perf_counter() - t0)
     srate = float(jnp.mean(shist.events.astype(jnp.float32)))
     print_fn(f"fedback_sweep_{n_runs}runs_x{sweep_rounds}rounds,"
              f"{steady_s * 1e6:.1f},one_program=True "
@@ -210,6 +301,7 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
         "realized_rate": srate,
     }
 
+    report["_env"] = _env_fingerprint()
     path = os.path.join(BENCH_DIR, "BENCH_round.json")
     with open(path, "w") as f:
         json.dump(report, f, indent=2)

@@ -11,7 +11,6 @@ import argparse
 import os
 
 import jax
-import numpy as np
 
 from repro.checkpoint import latest_checkpoint, load_checkpoint, \
     save_checkpoint

@@ -16,8 +16,10 @@ from .compact import (  # noqa: F401
 from .controller import (  # noqa: F401
     ControllerConfig,
     ControllerState,
+    clamp_target_rate,
     controller_step,
     delta_bounds,
+    feasible_rate,
     init_controller,
     realized_rate,
     tracking_error_bounds,
@@ -30,4 +32,11 @@ from .fedback import (  # noqa: F401
     make_round_fn,
     run_rounds,
 )
-from .state import DeferQueue, FLState, RoundMetrics  # noqa: F401
+from .state import (  # noqa: F401
+    DeferQueue,
+    FLState,
+    InFlight,
+    RoundMetrics,
+    delay_schedule,
+    init_inflight,
+)

@@ -10,7 +10,6 @@ it as the 2×-communication reference point.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

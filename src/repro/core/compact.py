@@ -154,7 +154,8 @@ def adaptive_limit(qload: jax.Array, c_min: int, c_max: int) -> jax.Array:
 
 def compact_plan(events: jax.Array, priority: jax.Array, capacity: int,
                  *, age: jax.Array | None = None,
-                 limit: jax.Array | int | None = None) -> CompactPlan:
+                 limit: jax.Array | int | None = None,
+                 eligible: jax.Array | None = None) -> CompactPlan:
     """Assign demand (events ∪ queue) to capacity slots.
 
     events: (N,) bool; priority: (N,) fp32 (trigger distances — larger
@@ -168,11 +169,21 @@ def compact_plan(events: jax.Array, priority: jax.Array, capacity: int,
     ``limit`` (traced or static, ≤ capacity) caps how many slots may
     commit this round (adaptive capacity); the slot *buffers* stay
     ``capacity``-sized.
+
+    ``eligible`` (None ⇒ everyone) masks clients out of the demand set
+    entirely — the stale-tolerant engine passes ``ttl == 0`` so a
+    client with an in-flight solve can neither re-fire nor be planned
+    again until its payload lands (one outstanding solve per client).
+    A queued client is always eligible by construction (it has not been
+    serviced, so nothing of it is in flight); the mask enforces that
+    invariant against the plan rather than assuming it.
     """
     n = events.shape[0]
     if age is None:
         age = jnp.zeros((n,), jnp.int32)
     demand = events | (age > 0)
+    if eligible is not None:
+        demand = demand & eligible
     # jnp.lexsort: last key is primary; ascending.  Index as the least-
     # significant key forces the low-index tie-break on every backend.
     order = jnp.lexsort((jnp.arange(n, dtype=jnp.int32),
@@ -237,17 +248,21 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
     always served by its own shard — and the caller can run it directly
     (single device) or under ``shard_map`` (mesh).
 
-    Returns block(events, distances, age, qload, theta, lam, z_prev,
-    omega, x, y, keys) -> (theta', lam', z_prev', age', qload',
-    committed, slot_losses, slot_valid, limit(1,)).
+    Returns block(events, distances, eligible, age, qload, theta, lam,
+    z_prev, omega, x, y, keys) -> (theta', lam', z_prev', age', qload',
+    committed, slot_losses, slot_valid, limit(1,)).  ``eligible`` is the
+    stale-tolerant engine's in-flight mask (all-True on the synchronous
+    engine); state outputs are *service proposals* — the synchronous
+    caller uses them as the committed state directly, the async caller
+    routes them through the delay pipeline (``engine.staleness_commit``).
     """
 
-    def block(events, distances, age, qload, theta, lam, z_prev, omega,
-              x, y, keys):
+    def block(events, distances, eligible, age, qload, theta, lam, z_prev,
+              omega, x, y, keys):
         limit = (adaptive_limit(qload, c_min, capacity)
                  if adaptive else None)
         plan = compact_plan(events, distances, capacity, age=age,
-                            limit=limit)
+                            limit=limit, eligible=eligible)
         queue = queue_update(DeferQueue(age=age, load=qload), plan,
                              alpha=alpha)
         th_rows = gather_rows(theta, plan.idx)
@@ -304,6 +319,6 @@ def shard_mapped_block(block: Callable, mesh, *,
     c, r = P(axis), P()
     return shard_map(
         block, mesh=mesh,
-        in_specs=(c, c, c, c, c, c, c, r, c, c, c),
+        in_specs=(c, c, c, c, c, c, c, c, r, c, c, c),
         out_specs=(c, c, c, c, c, c, c, c, c),
         check_rep=False)

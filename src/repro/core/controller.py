@@ -97,6 +97,30 @@ def demand_load_step(load: jax.Array, demand: jax.Array,
     return (1.0 - alpha) * load + alpha * demand.astype(jnp.float32)
 
 
+def feasible_rate(delay: jax.Array) -> jax.Array:
+    """Participation-rate ceiling under bounded-staleness rounds.
+
+    A client whose solve takes δ_i rounds to land is ineligible to
+    re-fire while in flight, so its issue stream has a minimum
+    inter-event gap of δ_i + 1 rounds — the highest achievable
+    time-averaged rate is 1/(1+δ_i).  The async engine clamps the
+    controller target to this ceiling (``clamp_target_rate``): without
+    the clamp the integral law winds up without bound for any client
+    whose L̄_i exceeds the ceiling (the error L_i − L̄_i can never close,
+    so δ_i^k → −∞ instead of settling at the Lemma 1 bound).  With
+    δ_i = 0 the ceiling is 1 and the clamp is the identity — the
+    synchronous controller, bit for bit.
+    """
+    return 1.0 / (1.0 + delay.astype(jnp.float32))
+
+
+def clamp_target_rate(target_rate, delay: jax.Array) -> jax.Array:
+    """Anti-windup target for the staleness-aware controller:
+    L̄_i ← min(L̄_i, 1/(1+δ_i)) per client (broadcasts a scalar L̄)."""
+    return jnp.minimum(jnp.asarray(target_rate, jnp.float32),
+                       feasible_rate(delay))
+
+
 def delta_bounds(cfg: ControllerConfig, delta_plus: float) -> tuple[float, float]:
     """Lemma 1 bounds on δ_i^k, given trigger saturation level δ₊.
 

@@ -80,3 +80,70 @@ def participant_mean_loss(losses, events):
     """Mean local train loss among this round's participants ((), fp32)."""
     ev = events.astype(jnp.float32)
     return jnp.sum(losses * ev) / jnp.maximum(jnp.sum(ev), 1.0)
+
+
+# --- stale-tolerant commit pipeline (bounded-staleness rounds) ----------
+#
+# The async engine separates *service* (the solver runs) from *commit*
+# (the result lands in θ/λ/z_prev and the consensus sees it): a solve
+# serviced at round k lands at round k+δ_i.  Everything below is pure
+# per-client mask algebra over the stacked axis — shard-local under the
+# clients mesh like the rest of the round, so the only collective stays
+# the consensus mean.  With δ ≡ 0 every mask path reduces to the
+# synchronous ``gated_commit`` bit for bit (land is never true, defer is
+# never true, direct == serviced).
+
+
+def staleness_masks(serviced, delay, ttl):
+    """One pipeline step of the bounded-staleness commit rule.
+
+    serviced: (N,) bool — rows the solver ran this round (ttl == 0 for
+    all of them: an in-flight client is ineligible and a plan may never
+    service it).  Returns ``(land, direct, defer, new_ttl)``:
+
+    * ``land``   — parked payloads whose countdown expires this round;
+    * ``direct`` — serviced rows with δ_i = 0 (the synchronous path);
+    * ``defer``  — serviced rows with δ_i > 0 (payload parks, ttl = δ);
+    * ``new_ttl``— countdown after the round.
+
+    ``land`` and ``direct``/``defer`` are disjoint by construction:
+    landing requires ttl ≥ 1, service requires ttl = 0.
+    """
+    land = ttl == 1
+    direct = serviced & (delay == 0)
+    defer = serviced & (delay > 0)
+    new_ttl = jnp.where(defer, delay, jnp.maximum(ttl - 1, 0))
+    return land, direct, defer, new_ttl
+
+
+def staleness_commit(current, proposed, parked, land, direct, defer):
+    """Route a proposed state field through the delay pipeline.
+
+    Returns ``(committed, new_parked)``: rows landing from the pipeline
+    take the parked payload, δ=0 service commits directly, everything
+    else keeps ``current``; deferred service overwrites the parked slot
+    (one outstanding solve per client — eligibility guarantees no
+    clobbering).
+    """
+    committed = tree_where(land, parked, tree_where(direct, proposed,
+                                                    current))
+    new_parked = tree_where(defer, proposed, parked)
+    return committed, new_parked
+
+
+def record_issue(hist, issued, rnd):
+    """Write round ``rnd``'s issued events into the (N, S+1) ring."""
+    return hist.at[:, rnd % hist.shape[1]].set(issued)
+
+
+def measured_commits(hist, delay, rnd):
+    """Commit-time event measurements for the controller.
+
+    Client i's issue at round k is *measured* at round k+δ_i — the
+    server learns about participation when the upload lands, not when
+    the trigger fires.  Reads column (rnd − δ_i) mod (S+1) of the ring
+    (freshly written for δ_i = 0, i.e. the synchronous measurement);
+    rounds earlier than δ_i read the all-False initialization.
+    """
+    col = (rnd - delay) % hist.shape[1]
+    return jnp.take_along_axis(hist, col[:, None], axis=1)[:, 0]

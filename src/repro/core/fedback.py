@@ -47,6 +47,18 @@ remains the bitwise reference for baselines; with ``capacity=N`` the
 two paths agree (bit-identical events, fp32-tolerance state).  See
 ``repro.core.compact`` and docs/compaction.md.
 
+**Stale-tolerant rounds.**  With ``max_staleness=S`` (None = the
+synchronous engine) the round becomes a bounded-staleness pipeline: a
+serviced solve lands in θ/λ/z_prev up to S rounds later (deterministic
+per-client delay schedule in ``FLState.inflight``), while the consensus
+average runs every round over the freshest available z-rows — Eq. 2.4
+already tolerates stale rows by construction.  A client with an
+in-flight solve is ineligible to re-fire (the eligibility mask threads
+through compact planning), the controller measures *commit-time* events
+through an issued-event ring buffer with a 1/(1+δ) feasible-rate
+anti-windup clamp, and ``max_staleness=0`` reproduces the synchronous
+engine bit for bit.  See docs/async.md.
+
 **Flat layout.**  Pass ``spec=`` (a ``repro.utils.flatstate.FlatSpec``
 built from the params template) and θ, λ, z_prev live as contiguous
 (N, D) fp32 matrices, ω as a (D,) vector: the trigger kernel reads the
@@ -78,12 +90,16 @@ from .engine import (
     consensus_mean,
     dual_ascent,
     gated_commit,
+    measured_commits,
     participant_mean,
     participant_mean_loss,
     prox_center,
+    record_issue,
+    staleness_commit,
+    staleness_masks,
 )
 from .selection import make_selection
-from .state import FLState, RoundMetrics
+from .state import FLState, InFlight, RoundMetrics, init_inflight
 from .trigger import trigger_distances
 
 ADMM_FAMILY = ("fedback", "fedadmm", "admm")
@@ -118,6 +134,15 @@ class FLConfig:
     #             active when the budget is slack-derived)
     adaptive_capacity: bool = True  # per-round commit limit follows the
     #            demand-load estimate within [⌈L̄·N⌉, ⌈slack·L̄·N⌉]
+    max_staleness: int | None = None  # stale-tolerant rounds: a serviced
+    #            solve lands up to this many rounds later (per-client
+    #            delay schedule; the consensus runs every round over the
+    #            freshest available z-rows).  None = the synchronous
+    #            engine (no pipeline state); 0 = the async pipeline with
+    #            zero delay, which reproduces the synchronous engine bit
+    #            for bit (the parity the tests pin down).
+    staleness_schedule: str = "roundrobin"  # per-client delay draw, see
+    #            repro.core.state.delay_schedule ("roundrobin"|"uniform")
     seed: int = 0
 
     def selection_name(self) -> str:
@@ -169,6 +194,12 @@ def init_state(cfg: FLConfig, params0, *, mesh=None,
     theta = tree_broadcast_like(params0, n)
     z_prev = tree_broadcast_like(params0, n)  # separate buffers for donation
     ctrl = init_controller(n, _ctrl_cfg(cfg))
+    inflight = None
+    if cfg.max_staleness is not None:
+        template = (spec.zeros_stacked(n) if spec is not None
+                    else tree_zeros_like(theta))
+        inflight = init_inflight(template, n, cfg.max_staleness,
+                                 kind=cfg.staleness_schedule, seed=cfg.seed)
     state = FLState(
         theta=theta,
         lam=tree_zeros_like(theta),
@@ -178,6 +209,7 @@ def init_state(cfg: FLConfig, params0, *, mesh=None,
         rng=jax.random.PRNGKey(cfg.seed),
         round=jnp.zeros((), jnp.int32),
         queue=init_queue(n),
+        inflight=inflight,
     )
     if mesh is not None:
         from repro.sharding.clients import check_divisible, fl_state_shardings
@@ -332,8 +364,14 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         if mesh is not None:
             block = shard_mapped_block(block, mesh, axis=client_axis)
 
+    async_mode = cfg.max_staleness is not None
+
     def dense_client_update(state, events, data_rng):
-        """All-N solve behind the event mask (the bitwise baseline)."""
+        """All-N solve behind the event mask (the bitwise baseline).
+
+        Returns *service proposals* (θ_out, λ⁺, z) — the caller gates
+        them into state (synchronous ``gated_commit``) or routes them
+        through the delay pipeline (``staleness_commit``)."""
         if is_admm:
             if use_admm_kernel:
                 from repro.kernels import ops
@@ -356,43 +394,90 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
 
         z_new = (jax.tree.map(jnp.add, theta_out, lam_new) if is_admm
                  else theta_out)
-        theta = gated_commit(events, theta_out, state.theta)
-        lam = gated_commit(events, lam_new, state.lam)
-        z_prev = pin(gated_commit(events, z_new, state.z_prev))
-        return theta, lam, z_prev, events, losses, events
+        return theta_out, lam_new, z_new, losses
 
-    def compact_client_update(state, events, distances, data_rng):
+    def compact_client_update(state, events, distances, eligible,
+                              data_rng):
         """Gather demand rows into capacity slots, solve C rows, scatter."""
         keys = jax.random.split(data_rng, n)
-        return block(events, distances, state.queue.age, state.queue.load,
-                     state.theta, state.lam, state.z_prev, state.omega,
-                     data["x"], data["y"], keys)
+        return block(events, distances, eligible, state.queue.age,
+                     state.queue.load, state.theta, state.lam,
+                     state.z_prev, state.omega, data["x"], data["y"], keys)
 
     def round_body(state: FLState, ctrl_overrides):
         rng, sel_rng, data_rng = jax.random.split(state.rng, 3)
 
         # --- server: trigger distances + selection --------------------
         distances = _trigger(cfg, state, mesh, client_axis)
-        events, ctrl = select(sel_rng, state, distances,
-                              ctrl_overrides=ctrl_overrides)
+        if async_mode:
+            # A client with an in-flight solve is ineligible to re-fire
+            # until its payload lands (one outstanding solve per client).
+            inflight = state.inflight
+            eligible = inflight.ttl == 0
+            events = select.decide(sel_rng, state, distances,
+                                   ctrl_overrides,
+                                   eligible=eligible) & eligible
+            ctrl = None  # stepped below on commit-time measurements
+        else:
+            eligible = jnp.ones((n,), bool)
+            events, ctrl = select(sel_rng, state, distances,
+                                  ctrl_overrides=ctrl_overrides)
 
-        # --- client-side computation ----------------------------------
+        # --- client-side computation (service proposals) --------------
         if cfg.compact:
-            (theta, lam, z_prev, q_age, q_load, committed, losses,
+            (theta_p, lam_p, z_p, q_age, q_load, serviced, losses,
              loss_mask, limits) = \
-                compact_client_update(state, events, distances, data_rng)
-            z_prev = pin(z_prev)
+                compact_client_update(state, events, distances, eligible,
+                                      data_rng)
             queue = state.queue._replace(age=q_age, load=q_load)
             # Σ over shards of the per-device commit limits (shape
             # (n_shards,) under the mesh, (1,) on a single device).
             realized_capacity = jnp.sum(limits)
             num_deferred = jnp.sum((q_age > 0).astype(jnp.int32))
         else:
-            theta, lam, z_prev, committed, losses, loss_mask = \
+            theta_p, lam_p, z_p, losses = \
                 dense_client_update(state, events, data_rng)
+            serviced, loss_mask = events, events
             queue = state.queue
             realized_capacity = jnp.asarray(n, jnp.int32)
-            num_deferred = None  # num_events - num_committed (= 0) below
+            num_deferred = None  # 0 below (dense rounds never defer)
+
+        # --- commit: synchronous gate or bounded-staleness pipeline ----
+        if async_mode:
+            land, direct, defer, new_ttl = staleness_masks(
+                serviced, inflight.delay, inflight.ttl)
+            theta, park_theta = staleness_commit(
+                state.theta, theta_p, inflight.theta, land, direct, defer)
+            lam, park_lam = staleness_commit(
+                state.lam, lam_p, inflight.lam, land, direct, defer)
+            z_prev, park_z = staleness_commit(
+                state.z_prev, z_p, inflight.z, land, direct, defer)
+            z_prev = pin(z_prev)
+            committed = direct | land
+            # Commit-time participation accounting: the controller
+            # measures an issue δ_i rounds after the fact, with the
+            # feasible-rate ceiling as anti-windup.
+            hist = record_issue(inflight.hist, events, state.round)
+            measured = measured_commits(hist, inflight.delay, state.round)
+            ctrl = select.measure(state.ctrl, measured, ctrl_overrides,
+                                  staleness_delay=inflight.delay)
+            new_inflight = InFlight(delay=inflight.delay, ttl=new_ttl,
+                                    theta=park_theta, lam=park_lam,
+                                    z=park_z, hist=hist)
+            num_inflight = jnp.sum((new_ttl > 0).astype(jnp.int32))
+            num_landed = jnp.sum(land.astype(jnp.int32))
+            if num_deferred is None:
+                num_deferred = jnp.zeros((), jnp.int32)
+        elif cfg.compact:
+            theta, lam, z_prev = theta_p, lam_p, pin(z_p)
+            committed, new_inflight = serviced, state.inflight
+            num_inflight = num_landed = jnp.zeros((), jnp.int32)
+        else:
+            theta = gated_commit(events, theta_p, state.theta)
+            lam = gated_commit(events, lam_p, state.lam)
+            z_prev = pin(gated_commit(events, z_p, state.z_prev))
+            committed, new_inflight = events, state.inflight
+            num_inflight = num_landed = jnp.zeros((), jnp.int32)
 
         # --- server-side aggregation -----------------------------------
         num_events = jnp.sum(events.astype(jnp.int32))
@@ -400,7 +485,8 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         if num_deferred is None:
             num_deferred = num_events - num_committed
         if is_admm:
-            # ω^{k+1} = (1/N) Σ_i z_i^prev  (stale entries included, Eq. 2.4)
+            # ω^{k+1} = (1/N) Σ_i z_i^prev — stale entries included
+            # (Eq. 2.4); under staleness the freshest *available* rows.
             omega = consensus_mean(z_prev)
         else:
             # FedAvg/FedProx: non-weighted mean over participants only.
@@ -421,10 +507,12 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             realized_capacity=realized_capacity,
             realized_slack=(realized_capacity.astype(jnp.float32)
                             / (rate_floor if rate_floor > 0 else 1.0)),
+            num_inflight=num_inflight,
+            num_landed=num_landed,
         )
         new_state = FLState(theta=theta, lam=lam, z_prev=z_prev, omega=omega,
                             ctrl=ctrl, rng=rng, round=state.round + 1,
-                            queue=queue)
+                            queue=queue, inflight=new_inflight)
         return new_state, metrics
 
     if ctrl_arg:

@@ -45,83 +45,161 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .controller import ControllerConfig, ControllerState, controller_step
-from .trigger import trigger_distances, evaluate_trigger
+from .controller import ControllerConfig, ControllerState, \
+    clamp_target_rate, controller_step
+from .trigger import evaluate_trigger
+
+
+class _SelectionBase:
+    """Decide/measure split shared by every strategy.
+
+    ``decide`` emits the round's selection events without touching the
+    controller; ``measure`` advances the controller given the events the
+    server actually *observed* — the same events on the synchronous
+    engine, the delayed commit-time stream on the stale-tolerant one
+    (``staleness_delay`` is the per-client delay vector; the target rate
+    is clamped to the feasible ceiling 1/(1+δ_i) as anti-windup, see
+    ``controller.feasible_rate``).  ``__call__`` is the one-shot
+    synchronous composition the dense/compact engines use.
+
+    ``decide`` takes the engine's eligibility mask (None on the
+    synchronous engine): feedback strategies ignore it (the engine
+    masks their events and the integral law self-corrects), but the
+    open-loop k-subset strategies (random, round-robin) draw their k
+    picks *among eligible clients* — discarding in-flight picks instead
+    would systematically under-shoot the target rate (at uniform delay
+    δ the fixed point of f = L̄·(1−f) is L̄/(1+L̄), below the feasible
+    1/(1+δ)).  With everyone eligible the mask-aware draw reduces to
+    the unrestricted one bit for bit, which keeps the staleness-0
+    parity exact.
+    """
+
+    def _measure_cfg(self, ctrl_overrides) -> ControllerConfig:
+        raise NotImplementedError
+
+    def decide(self, rng, state, distances, ctrl_overrides=None,
+               eligible=None):
+        raise NotImplementedError
+
+    def measure(self, ctrl: ControllerState, events, ctrl_overrides=None,
+                *, staleness_delay=None) -> ControllerState:
+        cfg = self._measure_cfg(ctrl_overrides)
+        if staleness_delay is not None:
+            cfg = cfg._replace(target_rate=clamp_target_rate(
+                cfg.target_rate, staleness_delay))
+        return controller_step(ctrl, events, cfg)
+
+    def __call__(self, rng, state, distances, ctrl_overrides=None):
+        events = self.decide(rng, state, distances, ctrl_overrides)
+        return events, self.measure(state.ctrl, events, ctrl_overrides)
+
+
+def _first_k_eligible(order_rank, eligible, k):
+    """Events for the first k eligible clients in a given total order.
+
+    order_rank: (N,) int32 — each client's position in the strategy's
+    draw order (a permutation rank or cyclic distance).  With
+    ``eligible=None`` this is exactly ``order_rank < k``; otherwise
+    ineligible clients are pushed behind every eligible one (order
+    preserved within each group) and the first k *eligible* fire — the
+    redraw that keeps open-loop strategies on target under staleness.
+    """
+    n = order_rank.shape[0]
+    if eligible is None:
+        return order_rank < k
+    keyed = jnp.where(eligible, order_rank, order_rank + n)
+    pos = jnp.zeros((n,), jnp.int32).at[
+        jnp.argsort(keyed).astype(jnp.int32)].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return (pos < k) & eligible
 
 
 @dataclasses.dataclass(frozen=True)
-class FedBackSelection:
+class FedBackSelection(_SelectionBase):
     controller: ControllerConfig
     metric: str = "l2"
 
-    def __call__(self, rng, state, distances, ctrl_overrides=None):
-        cfg = (self.controller if not ctrl_overrides
-               else self.controller._replace(**ctrl_overrides))
-        events = evaluate_trigger(distances, state.ctrl.delta)
-        ctrl = controller_step(state.ctrl, events, cfg)
-        return events, ctrl
+    def _measure_cfg(self, ctrl_overrides):
+        return (self.controller if not ctrl_overrides
+                else self.controller._replace(**ctrl_overrides))
+
+    def decide(self, rng, state, distances, ctrl_overrides=None,
+               eligible=None):
+        # The trigger is feedback-controlled: the engine masks the
+        # events and the integral law absorbs the lost participation
+        # (with the feasible-rate clamp as the target's ceiling).
+        return evaluate_trigger(distances, state.ctrl.delta)
 
 
 @dataclasses.dataclass(frozen=True)
-class RandomSelection:
+class RandomSelection(_SelectionBase):
     """Uniform L̄-fraction sampling without replacement (paper baselines)."""
 
     rate: float
 
-    def __call__(self, rng, state, distances, ctrl_overrides=None):
+    def _measure_cfg(self, ctrl_overrides):
+        # Controller state still tracks realized events for metrics parity.
+        return ControllerConfig(K=0.0, target_rate=self.rate)
+
+    def decide(self, rng, state, distances, ctrl_overrides=None,
+               eligible=None):
         n = state.ctrl.delta.shape[0]
         k = max(int(round(self.rate * n)), 1)
         perm = jax.random.permutation(rng, n)
-        events = jnp.zeros((n,), bool).at[perm[:k]].set(True)
-        # Controller state still tracks realized events for metrics parity.
-        ctrl = controller_step(state.ctrl, events,
-                               ControllerConfig(K=0.0, target_rate=self.rate))
-        return events, ctrl
+        rank = jnp.zeros((n,), jnp.int32).at[perm].set(
+            jnp.arange(n, dtype=jnp.int32))
+        return _first_k_eligible(rank, eligible, k)
 
 
 @dataclasses.dataclass(frozen=True)
-class BernoulliSelection:
+class BernoulliSelection(_SelectionBase):
     """I.i.d. Bernoulli(L̄) participation — unreliable-client ablation."""
 
     rate: float
 
-    def __call__(self, rng, state, distances, ctrl_overrides=None):
+    def _measure_cfg(self, ctrl_overrides):
+        return ControllerConfig(K=0.0, target_rate=self.rate)
+
+    def decide(self, rng, state, distances, ctrl_overrides=None,
+               eligible=None):
+        # i.i.d. coin flips model *unreliable clients* — an in-flight
+        # client whose flip is discarded is exactly the modeled
+        # unreliability, so no eligibility-aware redraw here.
         n = state.ctrl.delta.shape[0]
-        events = jax.random.bernoulli(rng, self.rate, (n,))
-        ctrl = controller_step(state.ctrl, events,
-                               ControllerConfig(K=0.0, target_rate=self.rate))
-        return events, ctrl
+        return jax.random.bernoulli(rng, self.rate, (n,))
 
 
 @dataclasses.dataclass(frozen=True)
-class FullSelection:
+class FullSelection(_SelectionBase):
     """δ ≡ 0 — vanilla consensus ADMM (every client, every round)."""
 
-    def __call__(self, rng, state, distances, ctrl_overrides=None):
+    def _measure_cfg(self, ctrl_overrides):
+        return ControllerConfig(K=0.0, target_rate=1.0)
+
+    def decide(self, rng, state, distances, ctrl_overrides=None,
+               eligible=None):
         n = state.ctrl.delta.shape[0]
-        events = jnp.ones((n,), bool)
-        ctrl = controller_step(state.ctrl, events,
-                               ControllerConfig(K=0.0, target_rate=1.0))
-        return events, ctrl
+        return jnp.ones((n,), bool)
 
 
 @dataclasses.dataclass(frozen=True)
-class RoundRobinSelection:
+class RoundRobinSelection(_SelectionBase):
     """Deterministic cyclic ⌊L̄N⌋-subset — a feedback-free deterministic
     control, used in ablations to isolate the value of the *adaptive*
     trigger over mere determinism."""
 
     rate: float
 
-    def __call__(self, rng, state, distances, ctrl_overrides=None):
+    def _measure_cfg(self, ctrl_overrides):
+        return ControllerConfig(K=0.0, target_rate=self.rate)
+
+    def decide(self, rng, state, distances, ctrl_overrides=None,
+               eligible=None):
         n = state.ctrl.delta.shape[0]
         k = max(int(round(self.rate * n)), 1)
         start = (state.round * k) % n
-        idx = (start + jnp.arange(k)) % n
-        events = jnp.zeros((n,), bool).at[idx].set(True)
-        ctrl = controller_step(state.ctrl, events,
-                               ControllerConfig(K=0.0, target_rate=self.rate))
-        return events, ctrl
+        cyclic = (jnp.arange(n, dtype=jnp.int32) - start) % n
+        return _first_k_eligible(cyclic, eligible, k)
 
 
 def make_selection(name: str, *, rate: float, controller: ControllerConfig,

@@ -26,11 +26,14 @@ from __future__ import annotations
 from typing import Any, NamedTuple
 
 import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_zeros_like
 
 from .controller import ControllerState
 
 #: FLState fields whose leaves carry the leading (N, ...) client axis.
-CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev", "queue")
+CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev", "queue", "inflight")
 
 #: ControllerState fields with a per-client (N,) vector.
 CTRL_STACKED_FIELDS = ("delta", "load", "event_count")
@@ -54,6 +57,78 @@ class DeferQueue(NamedTuple):
     #                  per-round solver-row demand (adaptive capacity).
 
 
+class InFlight(NamedTuple):
+    """Per-client delay pipeline of the stale-tolerant round engine.
+
+    A solve *serviced* at round k does not commit immediately: its
+    result is parked here and lands at round k+δ_i, where δ_i is the
+    client's (deterministic, per-run-static) delay drawn by
+    :func:`delay_schedule`.  Because a client with an in-flight solve is
+    ineligible to re-fire (the eligibility mask threaded through
+    ``core/compact.py`` planning), one slot per client suffices — the
+    pipeline is a bounded-staleness commit rule, never an unbounded
+    backlog.  All fields are client-stacked (leading axis N), so the
+    pipeline is shard-local under the ``clients`` mesh exactly like the
+    ``DeferQueue`` — an in-flight solve always lands on the device that
+    owns the client's state row.
+
+    ``hist`` is the issued-event ring buffer that gives the controller
+    commit-time measurements: the server learns that client i fired at
+    round k only when the upload lands at round k+δ_i (at
+    ``max_staleness=0`` the ring has one column and the measurement is
+    the issue itself — the synchronous engine, bit for bit).
+    """
+
+    delay: jax.Array  # (N,) int32 — per-client commit delay δ_i in
+    #                   [0, max_staleness]; static over the run.
+    ttl: jax.Array  # (N,) int32 — rounds until the parked payload
+    #                 lands; 0 = no solve in flight (client eligible).
+    theta: Any  # stacked pytree (N, ...) — parked θ_i solve results
+    lam: Any  # stacked pytree (N, ...) — parked λ_i^{k+1}
+    z: Any  # stacked pytree (N, ...) — parked z_i = θ_i + λ_i uploads
+    hist: jax.Array  # (N, max_staleness+1) bool — issued-event ring
+    #                  buffer (column k mod (S+1) holds round k's
+    #                  issues); read back δ_i rounds later.
+
+
+def delay_schedule(n_clients: int, max_staleness: int, *,
+                   kind: str = "roundrobin", seed: int = 0) -> jax.Array:
+    """Deterministic per-client delay draw δ_i ∈ [0, max_staleness].
+
+    ``roundrobin`` (default) cycles 0..S over the client index — fully
+    reproducible with an exactly uniform delay histogram.  ``uniform``
+    draws i.i.d. uniform delays from a seed-derived PRNG key (still
+    deterministic per seed).  Traces stay reproducible either way.
+    """
+    if max_staleness < 0:
+        raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
+    if kind == "roundrobin":
+        return jnp.arange(n_clients, dtype=jnp.int32) % (max_staleness + 1)
+    if kind == "uniform":
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), 0x5A1E)
+        return jax.random.randint(key, (n_clients,), 0, max_staleness + 1,
+                                  jnp.int32)
+    raise ValueError(f"unknown delay schedule kind: {kind}")
+
+
+def init_inflight(template, n_clients: int, max_staleness: int, *,
+                  kind: str = "roundrobin", seed: int = 0) -> InFlight:
+    """Empty pipeline: nothing in flight, all-False event history.
+
+    ``template`` is any client-stacked state pytree (θ works for both
+    the flat (N, D) and the stacked-pytree layout) — the payload
+    buffers mirror its structure.
+    """
+    return InFlight(
+        delay=delay_schedule(n_clients, max_staleness, kind=kind, seed=seed),
+        ttl=jnp.zeros((n_clients,), jnp.int32),
+        theta=tree_zeros_like(template),
+        lam=tree_zeros_like(template),
+        z=tree_zeros_like(template),
+        hist=jnp.zeros((n_clients, max_staleness + 1), bool),
+    )
+
+
 class FLState(NamedTuple):
     theta: Any  # stacked pytree (N, ...) — local primal variables θ_i
     lam: Any  # stacked pytree (N, ...) — dual variables λ_i (zeros for FedAvg/Prox)
@@ -66,6 +141,10 @@ class FLState(NamedTuple):
     #                    at init; passed through unchanged by the dense
     #                    engine).  Optional for hand-built states in
     #                    tests; init_state always materializes it.
+    inflight: Any = None  # InFlight — stale-tolerant commit pipeline;
+    #                       materialized by init_state iff
+    #                       cfg.max_staleness is not None (None = the
+    #                       synchronous engine, no pipeline state).
 
 
 class RoundMetrics(NamedTuple):
@@ -85,3 +164,7 @@ class RoundMetrics(NamedTuple):
     realized_slack: jax.Array  # () fp32 — realized_capacity / (L̄·N),
     #                            the round's effective capacity slack
     #                            (1/L̄ on the dense path)
+    num_inflight: Any = None  # () int32 — solves in flight after the
+    #                           round (0 on the synchronous engine)
+    num_landed: Any = None  # () int32 — delayed solves that committed
+    #                         this round (0 on the synchronous engine)

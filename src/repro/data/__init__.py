@@ -1,4 +1,7 @@
-from .synthetic import make_synthetic_mnist, make_synthetic_cifar, \
-    make_least_squares  # noqa: F401
+from .synthetic import (  # noqa: F401
+    make_least_squares,
+    make_synthetic_cifar,
+    make_synthetic_mnist,
+)
 from .partition import partition_label_shard, partition_dirichlet  # noqa: F401
 from .pipeline import federated_arrays  # noqa: F401

@@ -111,6 +111,51 @@ def fedback_round_memory_s(n_clients: int, solver_rows: int, dim: int,
         dtype_bytes=dtype_bytes)["total_bytes"] / HBM_BW
 
 
+def fedback_async_overlap(n_clients: int, solver_rows: int, dim: int, *,
+                          max_staleness: int, n_chips: int = 1,
+                          data_bytes_per_client: int = 0,
+                          dtype_bytes: int = 4) -> dict[str, float]:
+    """Modeled round-time overlap of the stale-tolerant engine.
+
+    The synchronous round's critical path is serial: the solver term
+    (gathered state + data through the capacity slots) must finish
+    before the server term (trigger read, consensus all-reduce, commit
+    writes) can run.  With ``max_staleness ≥ 1`` the commit rule
+    tolerates solves landing up to S rounds late, so the solver stream
+    of round k overlaps the server/collective stream of rounds
+    k..k+S−1 and the steady-state critical path is the *maximum* of the
+    two terms, not their sum:
+
+        t_sync  = t_solver + t_server (+ t_collective)
+        t_async = max(t_solver, t_server + t_collective)
+
+    The collective term models the consensus all-reduce over the
+    ``clients`` mesh (ring all-reduce moves ~2·D bytes per chip).
+    Returns both modeled times plus the overlap speedup — the number
+    the async rows of BENCH_round.json carry next to the measured
+    wall-clock, so the benchmark can show how much of the modeled
+    overlap the XLA schedule actually realizes.
+    """
+    hbm = fedback_round_hbm_bytes(
+        n_clients, solver_rows, dim,
+        data_bytes_per_client=data_bytes_per_client,
+        dtype_bytes=dtype_bytes)
+    t_solver = hbm["solver_bytes"] / HBM_BW
+    t_server = hbm["server_bytes"] / HBM_BW
+    t_coll = (2.0 * dim * dtype_bytes / LINK_BW) if n_chips > 1 else 0.0
+    t_sync = t_solver + t_server + t_coll
+    t_async = (max(t_solver, t_server + t_coll) if max_staleness > 0
+               else t_sync)
+    return {
+        "solver_s": t_solver,
+        "server_s": t_server,
+        "collective_s": t_coll,
+        "modeled_sync_s": t_sync,
+        "modeled_async_s": t_async,
+        "modeled_overlap_speedup": t_sync / max(t_async, 1e-30),
+    }
+
+
 def summarize(record: dict) -> str:
     r = record
     t = r["roofline"]

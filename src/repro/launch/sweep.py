@@ -26,7 +26,11 @@ the deferral queue and demand-load EMA live inside ``FLState``
 (``FLState.queue``), so they thread through the scan-of-vmap as regular
 (runs, N) carry state — every run keeps its own independent queue and
 adaptive capacity limit, and ``history.num_deferred`` /
-``history.realized_slack`` come back per run.
+``history.realized_slack`` come back per run.  The stale-tolerant
+delay pipeline (``cfg.max_staleness``, ``FLState.inflight``) threads
+the same way: per-run in-flight payloads and issued-event rings are
+just more (runs, N, ...) carry leaves, with ``history.num_inflight`` /
+``history.num_landed`` per run.
 
 CLI demo (quadratic problem, prints per-run realized rates):
 
@@ -162,6 +166,12 @@ def main():
     ap.add_argument("--slack", type=float, default=1.5,
                     help="capacity slack bound (adaptive limit lives in "
                          "[⌈L̄·N⌉, ⌈slack·L̄·N⌉])")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="stale-tolerant rounds: serviced solves land up "
+                         "to this many rounds later (deterministic "
+                         "per-client delay schedule; 0 = async pipeline "
+                         "that reproduces the synchronous engine bit for "
+                         "bit; omit for the synchronous engine)")
     args = ap.parse_args()
 
     import numpy as np
@@ -173,6 +183,7 @@ def main():
                    participation=args.participation, rho=1.0, lr=0.1,
                    momentum=0.0, epochs=2, batch_size=8,
                    compact=args.compact, capacity_slack=args.slack,
+                   max_staleness=args.max_staleness,
                    controller=ControllerConfig(K=0.2, alpha=0.9))
     data, params0, loss_fn = make_least_squares(args.n_clients)
     spec = None if args.tree_layout else make_flat_spec(params0)
@@ -191,11 +202,14 @@ def main():
         hist.events.astype(jnp.float32), axis=(0, 2)))
     slacks = np.asarray(jnp.mean(hist.realized_slack, axis=0))
     queues = np.asarray(hist.num_deferred[-1])
+    inflight = np.asarray(hist.num_inflight[-1])
     print("seed,K,target,realized_rate,realized_slack,queue_depth,"
-          "final_train_loss")
-    for (seed, k, tgt), rate, slk, q, loss in zip(
-            runs, rates, slacks, queues, np.asarray(hist.train_loss[-1])):
-        print(f"{seed},{k},{tgt},{rate:.3f},{slk:.2f},{int(q)},{loss:.5f}")
+          "inflight_depth,final_train_loss")
+    for (seed, k, tgt), rate, slk, q, fl, loss in zip(
+            runs, rates, slacks, queues, inflight,
+            np.asarray(hist.train_loss[-1])):
+        print(f"{seed},{k},{tgt},{rate:.3f},{slk:.2f},{int(q)},{int(fl)},"
+              f"{loss:.5f}")
 
 
 if __name__ == "__main__":

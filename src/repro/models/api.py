@@ -7,7 +7,7 @@ shared by the smoke tests, the launchers and the multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ from repro.sharding.actshard import constrain_batch
 from .attention import attention_decode, attention_forward, attention_init
 from .layers import (
     chunked_lm_loss,
-    cross_entropy_logits,
     dense_init,
     embed_init,
     rmsnorm,

@@ -57,10 +57,15 @@ def fl_state_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
                        batched: bool = False):
     """Prefix-pytree of shardings for :class:`repro.core.state.FLState`.
 
-    Client-stacked subtrees (θ, λ, z_prev, the deferral queue and the
+    Client-stacked subtrees (θ, λ, z_prev, the deferral queue, the
+    in-flight delay pipeline of the stale-tolerant engine and the
     per-client controller vectors) shard their leading axis over
     ``axis``; server-side state
-    (ω, rng, round counters) is replicated.  With ``batched=True`` the
+    (ω, rng, round counters) is replicated.  Every ``InFlight`` leaf —
+    payload slots, ttl/delay vectors and the (N, S+1) issued-event ring
+    — keeps the client axis leading, so one prefix leaf covers the whole
+    pipeline and an in-flight solve always lands on the device that owns
+    the client's state row.  With ``batched=True`` the
     leaves carry an extra leading sweep axis (see ``repro.launch.sweep``)
     which stays replicated while the client axis (now dim 1) is sharded.
     """
@@ -92,7 +97,8 @@ def round_metrics_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
     r = _replicated(mesh)
     return RoundMetrics(events=c, num_events=r, distances=c, delta=c,
                         load=c, train_loss=r, num_deferred=r,
-                        realized_capacity=r, realized_slack=r)
+                        realized_capacity=r, realized_slack=r,
+                        num_inflight=r, num_landed=r)
 
 
 def client_data_shardings(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):

@@ -63,6 +63,19 @@ class FlatSpec:
         ]
         return jax.tree.unflatten(self.treedef, leaves)
 
+    def zeros_stacked(self, n: int) -> jax.Array:
+        """Empty (n, D) fp32 client-stacked buffer in the flat layout.
+
+        The allocation primitive for auxiliary client-state buffers that
+        must mirror θ's layout without being derived from a live value —
+        e.g. the in-flight payload slots of the stale-tolerant round
+        engine (``repro.core.state.InFlight``): under the flat codec the
+        pipeline parks solve results as rows of one contiguous matrix,
+        so landing a payload is a single-buffer masked select exactly
+        like every other flat-state commit.
+        """
+        return jnp.zeros((n, self.dim), jnp.float32)
+
     def flatten_stacked(self, tree) -> jax.Array:
         """Stacked pytree (N, ...) leaves → contiguous (N, D) fp32."""
         leaves = self.treedef.flatten_up_to(tree)

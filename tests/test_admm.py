@@ -5,10 +5,8 @@ closed-form global minimizer of Σ_i f_i — the engine must converge to it
 (Theorem 5 is about stationary points; for strongly convex quadratics
 the stationary point is unique and global).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     ControllerConfig,

@@ -1,11 +1,10 @@
 """Checkpoint store round-trips full federated state."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
-from repro.core import ControllerConfig, FLConfig, init_state
+from repro.core import FLConfig, init_state
 from repro.models.mlp import init_mlp
 
 

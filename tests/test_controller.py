@@ -10,7 +10,6 @@ Validates the paper's theory numerically:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.controller import (

@@ -96,7 +96,7 @@ class TestCostAnalysisSchema:
 
 class TestSkipRules:
     def test_skip_rules_via_dry_run(self):
-        from repro.launch.dryrun import build_step  # light import check
+        from repro.launch.dryrun import build_step  # noqa: F401 — light import check
         from repro.configs import get_config, shape_applicable
         ok, reason = shape_applicable(get_config("hubert-xlarge"),
                                       "decode_32k")

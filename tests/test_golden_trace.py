@@ -1,11 +1,14 @@
-"""Golden-trace regression: a fixed-seed 30-round N=64 FedBack run.
+"""Golden-trace regression: fixed-seed 30-round N=64 FedBack runs.
 
-The compacted round engine (deferral queue + adaptive capacity, flat
-layout) is replayed against a checked-in trace: the full event stream
-(bit-exact) and the final server ω (sha256 of the fp32 bytes plus a
-value-level comparison).  Any silent numerical drift from a future
-kernel/compaction refactor trips this before it can contaminate
-benchmark baselines.
+Two traces are pinned — the compacted synchronous engine (deferral
+queue + adaptive capacity, flat layout) and the stale-tolerant engine
+at ``max_staleness=2`` (delay pipeline + commit-time controller
+measurements on top of the same compacted round).  Each is replayed
+against a checked-in record: the full event stream (bit-exact), the
+deferral/in-flight trajectories, and the final server ω (sha256 of the
+fp32 bytes plus a value-level comparison).  Any silent numerical drift
+from a future kernel/compaction/staleness refactor trips this before it
+can contaminate benchmark baselines.
 
 Regenerate intentionally with:
 
@@ -24,17 +27,22 @@ from repro.core import ControllerConfig, FLConfig, init_state, \
     make_flat_spec, make_round_fn, run_rounds
 from repro.data import make_least_squares
 
-GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                           "golden", "fedback_n64_r30.json")
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+GOLDEN_PATHS = {
+    "sync": os.path.join(GOLDEN_DIR, "fedback_n64_r30.json"),
+    "async_s2": os.path.join(GOLDEN_DIR, "fedback_async_n64_r30.json"),
+}
 N, ROUNDS = 64, 30
 
 
-def _run_trace():
+def _run_trace(variant: str = "sync"):
     data, params0, ls = make_least_squares(N, 8, 5)
     spec = make_flat_spec(params0)
     cfg = FLConfig(algorithm="fedback", n_clients=N, participation=0.25,
                    rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
                    seed=0, compact=True, capacity_slack=1.25,
+                   max_staleness=2 if variant == "async_s2" else None,
                    controller=ControllerConfig(K=0.5, alpha=0.9))
     state = init_state(cfg, params0, spec=spec)
     round_fn = make_round_fn(cfg, ls, data, spec=spec)
@@ -42,7 +50,8 @@ def _run_trace():
     events = np.asarray(hist.events).astype(np.uint8)
     omega = np.asarray(state.omega, np.float32).reshape(-1)
     deferred = np.asarray(hist.num_deferred).astype(int)
-    return events, omega, deferred
+    inflight = np.asarray(hist.num_inflight).astype(int)
+    return events, omega, deferred, inflight
 
 
 def _event_hex(events: np.ndarray) -> list[str]:
@@ -58,30 +67,33 @@ def _env_fingerprint() -> str:
             f"machine={platform.machine()}")
 
 
-def _record(events, omega, deferred) -> dict:
+def _record(events, omega, deferred, inflight) -> dict:
     return {
         "n_clients": N,
         "rounds": ROUNDS,
         "env": _env_fingerprint(),
         "events_hex": _event_hex(events),
         "deferred": deferred.tolist(),
+        "inflight": inflight.tolist(),
         "omega": [float(x) for x in omega],
         "omega_sha256": hashlib.sha256(omega.tobytes()).hexdigest(),
     }
 
 
 class TestGoldenTrace:
-    def test_fixed_seed_run_matches_golden(self, request):
-        events, omega, deferred = _run_trace()
-        record = _record(events, omega, deferred)
+    @pytest.mark.parametrize("variant", ["sync", "async_s2"])
+    def test_fixed_seed_run_matches_golden(self, request, variant):
+        golden_path = GOLDEN_PATHS[variant]
+        events, omega, deferred, inflight = _run_trace(variant)
+        record = _record(events, omega, deferred, inflight)
         if request.config.getoption("--update-golden"):
-            os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
-            with open(GOLDEN_PATH, "w") as f:
+            os.makedirs(os.path.dirname(golden_path), exist_ok=True)
+            with open(golden_path, "w") as f:
                 json.dump(record, f, indent=1)
-            pytest.skip(f"golden trace rewritten: {GOLDEN_PATH}")
-        assert os.path.exists(GOLDEN_PATH), \
+            pytest.skip(f"golden trace rewritten: {golden_path}")
+        assert os.path.exists(golden_path), \
             "no golden trace checked in — run with --update-golden"
-        with open(GOLDEN_PATH) as f:
+        with open(golden_path) as f:
             golden = json.load(f)
         if (record["env"] != golden.get("env")
                 and not os.environ.get("REPRO_GOLDEN_BITEXACT")):
@@ -89,7 +101,8 @@ class TestGoldenTrace:
             # can legitimately flip near-threshold trigger events, so
             # off the generating environment the discrete trace is not
             # comparable either; numerics are guarded there by the
-            # parity matrix in tests/test_compact.py instead.
+            # parity matrices in tests/test_compact.py and
+            # tests/test_async.py instead.
             pytest.skip(f"golden generated on {golden.get('env')!r}, "
                         f"running on {record['env']!r} — regenerate with "
                         "--update-golden or force via REPRO_GOLDEN_BITEXACT")
@@ -97,6 +110,9 @@ class TestGoldenTrace:
             "event stream drifted from the golden trace"
         assert record["deferred"] == golden["deferred"], \
             "deferral-queue trajectory drifted from the golden trace"
+        assert record["inflight"] == golden.get("inflight",
+                                                record["inflight"]), \
+            "in-flight trajectory drifted from the golden trace"
         np.testing.assert_allclose(
             omega, np.asarray(golden["omega"], np.float32),
             rtol=1e-6, atol=1e-7,

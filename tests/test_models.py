@@ -1,10 +1,7 @@
 """Deep unit tests for model components (beyond the per-arch smoke)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import blockwise_attention
