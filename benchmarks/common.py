@@ -5,6 +5,21 @@ accuracy, losses, controller state).  Table 1 (events-to-accuracy),
 Table 2 (realized participation) and Fig. 1 (accuracy curves/variance)
 are all views over the same traces, which are cached as JSON under
 ``experiments/paper/`` so the three benchmarks never recompute a run.
+
+Two runners fill the cache:
+
+* :func:`run_sweep` — one (algorithm, rate, seed) at a time, a python
+  round loop with inline evals (the original paper-faithful driver);
+* :func:`run_grid` — the rate grid through ``repro.launch.sweep``'s
+  scan-of-vmap **one-program** runner, in ``eval_every``-round segments
+  with a vmapped eval between segments.  One XLA compile covers all of
+  a seed's rates for FedBack (the target rate is a runtime controller
+  override; open-loop baselines recompile per rate), seeds run as
+  separate programs (data partition and model init are seed-derived),
+  and each run's trace lands in the same cache files ``run_sweep``
+  reads — so Table 1/2 and Fig. 1 consume grid-produced traces
+  unchanged.  The ``smoke`` preset is the CI-sized tier of the full
+  Table-1/Table-2 grids.
 """
 from __future__ import annotations
 
@@ -31,8 +46,12 @@ from repro.models.mlp import (
 
 CACHE_DIR = os.environ.get("REPRO_PAPER_CACHE", "experiments/paper")
 
-# quick preset: CI-sized but same structure; paper preset: §5 scale
+# smoke preset: the tiny always-on tier of the Table-1/2 grids (cached
+# one-program runs); quick preset: CI-sized but same structure; paper
+# preset: §5 scale (nightly/manual)
 PRESETS = {
+    "smoke": dict(n_clients=16, n_train=1920, n_test=480, max_rounds=24,
+                  eval_every=8, rates=(0.1, 0.2), seeds=(0,)),
     "quick": dict(n_clients=32, n_train=6400, n_test=1500, max_rounds=220,
                   eval_every=4, rates=(0.1, 0.2), seeds=(0,),
                   per_dataset={"cifar": dict(n_train=4000, max_rounds=120,
@@ -65,7 +84,7 @@ def _setup(dataset: str, preset: dict, seed: int):
         params0 = init_mlp(jax.random.PRNGKey(seed))
         spec = make_flat_spec(params0)
         loss_fn = make_loss_fn(mlp_logits)
-        eval_fn = make_eval_fn(make_loss_and_acc_fn(mlp_logits), spec=spec)
+        laa_fn = make_loss_and_acc_fn(mlp_logits)
         mkcfg = paper_mnist.fl_config
         target = paper_mnist.TARGET_ACCURACY
     elif dataset == "cifar":
@@ -77,12 +96,12 @@ def _setup(dataset: str, preset: dict, seed: int):
         params0 = init_cnn(jax.random.PRNGKey(seed))
         spec = make_flat_spec(params0)
         loss_fn = make_loss_fn(cnn_logits)
-        eval_fn = make_eval_fn(make_loss_and_acc_fn(cnn_logits), spec=spec)
+        laa_fn = make_loss_and_acc_fn(cnn_logits)
         mkcfg = paper_cifar.fl_config
         target = paper_cifar.TARGET_ACCURACY
     else:
         raise ValueError(dataset)
-    return data, test, params0, spec, loss_fn, eval_fn, mkcfg, target
+    return data, test, params0, spec, loss_fn, laa_fn, mkcfg, target
 
 
 def run_sweep(dataset: str, algorithm: str, rate: float, *,
@@ -90,14 +109,14 @@ def run_sweep(dataset: str, algorithm: str, rate: float, *,
               use_cache: bool = True) -> dict:
     """Run (or load) one FL trajectory; returns the trace dict."""
     preset = _apply_per_dataset(PRESETS[preset_name], dataset)
-    tag = f"{dataset}_{algorithm}_L{rate}_{preset_name}_s{seed}"
-    path = os.path.join(CACHE_DIR, tag + ".json")
+    path = _trace_path(dataset, algorithm, rate, preset_name, seed)
     if use_cache and os.path.exists(path):
         with open(path) as f:
             return json.load(f)
 
-    data, test, params0, spec, loss_fn, eval_fn, mkcfg, target = _setup(
+    data, test, params0, spec, loss_fn, laa_fn, mkcfg, target = _setup(
         dataset, preset, seed)
+    eval_fn = make_eval_fn(laa_fn, spec=spec)
     cfg = mkcfg(algorithm=algorithm, participation=rate,
                 n_clients=preset["n_clients"], seed=seed)
     state = init_state(cfg, params0, spec=spec)
@@ -111,7 +130,12 @@ def run_sweep(dataset: str, algorithm: str, rate: float, *,
         ev = int(m.num_events)
         events_per_round.append(ev)
         event_counts += np.asarray(m.events)
-        if k % preset["eval_every"] == 0 or k == preset["max_rounds"] - 1:
+        # Segment-end cadence (rounds eval_every-1, 2·eval_every-1, ...)
+        # — the same sample points run_grid's one-program segments hit,
+        # so loop- and grid-produced traces in the shared cache are
+        # directly comparable.
+        if (k + 1) % preset["eval_every"] == 0 \
+                or k == preset["max_rounds"] - 1:
             loss, acc = eval_fn(state, test["x"], test["y"])
             acc_trace.append((k, float(acc)))
             loss_trace.append((k, float(loss)))
@@ -134,6 +158,112 @@ def run_sweep(dataset: str, algorithm: str, rate: float, *,
     with open(path, "w") as f:
         json.dump(trace, f)
     return trace
+
+
+def _trace_path(dataset, algorithm, rate, preset_name, seed) -> str:
+    return os.path.join(
+        CACHE_DIR, f"{dataset}_{algorithm}_L{rate}_{preset_name}_s{seed}"
+        ".json")
+
+
+def run_grid(dataset: str, algorithm: str, *, preset_name: str = "quick",
+             rates=None, seeds=None, use_cache: bool = True) -> list[dict]:
+    """Run the (seeds × rates) grid as one-program sweeps; fill the cache.
+
+    The whole grid advances through ``repro.launch.sweep`` — a single
+    scan-of-vmap program per compile covering every run — in
+    ``eval_every``-round segments, with a jitted vmapped eval of all
+    runs' server models between segments.  Each run's trajectory is
+    written to the same per-run JSON files :func:`run_sweep` produces,
+    so Table 1/2 and Fig. 1 read grid-produced traces unchanged.
+
+    FedBack grids cover all of one seed's rates in ONE program (the
+    target rate is a runtime controller override); open-loop baselines
+    (random selection) bake the rate into the selection draw, so they
+    compile once per rate.  Seeds run as separate programs because the
+    data partition and the model init are seed-derived, exactly as in
+    :func:`run_sweep` — batching them would silently share one dataset
+    split across seeds and understate seed variance.  Returns the
+    traces in (seed-major, rate-minor) grid order.
+    """
+    from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
+
+    preset = _apply_per_dataset(PRESETS[preset_name], dataset)
+    rates = tuple(rates if rates is not None else preset["rates"])
+    seeds = tuple(seeds if seeds is not None else preset.get("seeds", (0,)))
+    if use_cache and all(
+            os.path.exists(_trace_path(dataset, algorithm, r, preset_name,
+                                       s))
+            for s in seeds for r in rates):
+        return [json.load(open(_trace_path(dataset, algorithm, r,
+                                           preset_name, s)))
+                for s in seeds for r in rates]
+
+    n = preset["n_clients"]
+    seg = preset["eval_every"]
+    n_segs = -(-preset["max_rounds"] // seg)  # ceil
+    rounds = n_segs * seg
+    # fedback: every rate in one program; baselines: one program per rate
+    rate_groups = ([rates] if algorithm == "fedback"
+                   else [(r,) for r in rates])
+    traces = {}
+    for seed in seeds:
+        data, test, params0, spec, loss_fn, laa_fn, mkcfg, target = \
+            _setup(dataset, preset, seed)
+        vm_eval = jax.jit(jax.vmap(
+            lambda om, x, y: laa_fn(spec.unflatten(om), x, y),
+            in_axes=(0, None, None)))
+        for group in rate_groups:
+            t0 = time.time()
+            cfg = mkcfg(algorithm=algorithm, participation=group[0],
+                        n_clients=n, seed=seed)
+            grid = SweepGrid(seeds=(seed,), target_rates=group)
+            states, overrides, runs = init_sweep(cfg, params0, grid,
+                                                 spec=spec)
+            sweep_fn = make_sweep_fn(cfg, loss_fn, data, rounds=seg,
+                                     spec=spec)
+            acc = {r: [] for r in runs}
+            losses = {r: [] for r in runs}
+            events, loads = [], []
+            for s in range(n_segs):
+                states, hist = sweep_fn(states, overrides)
+                events.append(np.asarray(hist.events))  # (seg, runs, N)
+                loads.append(np.asarray(hist.load))
+                ev_loss, ev_acc = vm_eval(states.omega, test["x"],
+                                          test["y"])
+                for i, run in enumerate(runs):
+                    acc[run].append(((s + 1) * seg - 1, float(ev_acc[i])))
+                    losses[run].append(((s + 1) * seg - 1,
+                                        float(ev_loss[i])))
+            events = np.concatenate(events)  # (rounds, runs, N)
+            loads = np.concatenate(loads)
+            group_wall = time.time() - t0
+            for i, run in enumerate(runs):
+                rate = run[2]
+                trace = {
+                    "dataset": dataset, "algorithm": algorithm,
+                    "rate": float(rate), "preset": preset_name,
+                    "seed": int(seed), "grid": True,
+                    "target_accuracy": target,
+                    "events_per_round":
+                        events[:, i].sum(axis=1).astype(int).tolist(),
+                    "accuracy": acc[run],
+                    "loss": losses[run],
+                    "mean_load": loads[:, i].mean(axis=1).tolist(),
+                    "client_event_counts":
+                        events[:, i].sum(axis=0).astype(int).tolist(),
+                    "rounds": rounds,
+                    "n_clients": n,
+                    # the one-program group's wall-clock amortized over
+                    # its runs (comparable to run_sweep's per-run wall_s)
+                    "wall_s": group_wall / max(len(runs), 1),
+                }
+                os.makedirs(CACHE_DIR, exist_ok=True)
+                with open(_trace_path(dataset, algorithm, rate,
+                                      preset_name, seed), "w") as f:
+                    json.dump(trace, f)
+                traces[(int(seed), float(rate))] = trace
+    return [traces[(int(s), float(r))] for s in seeds for r in rates]
 
 
 def events_to_accuracy(trace: dict, target: float | None = None):

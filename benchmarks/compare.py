@@ -59,6 +59,9 @@ ROUND_SCHEMA = {
     "compact_async_s0": ("per_round_us", "solver_rows_per_round"),
     "compact_async_s2": ("per_round_us", "solver_rows_per_round",
                          "modeled_overlap_speedup"),
+    "ragged_dirichlet": ("per_round_us", "solver_rows_per_round",
+                         "data_rows_total", "uniform_parity_bitexact",
+                         "conservation_ok"),
     "comparison": ("solver_rows_ratio", "speedup_per_round"),
     "async_parity": ("s0_matches_sync_compact",),
     "sweep": ("steady_us",),
@@ -205,6 +208,17 @@ def compare_round(base: dict, fresh: dict, gate: Gate, *,
     else:
         gate.ok("round: staleness-0 pipeline tracks the synchronous "
                 "engine")
+    ragged = fresh.get("ragged_dirichlet", {})
+    for flag, meaning in (("uniform_parity_bitexact",
+                           "uniform ragged tracks the rectangular "
+                           "compact engine bit for bit"),
+                          ("conservation_ok",
+                           "ragged pool conserves every data point")):
+        if ragged.get(flag) is not True:
+            gate.fail(f"round: ragged_dirichlet.{flag} is not true in "
+                      "the fresh report")
+        else:
+            gate.ok(f"round: {meaning}")
 
 
 def compare_kernels(base: dict, fresh: dict, gate: Gate, *,

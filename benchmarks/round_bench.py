@@ -32,11 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ControllerConfig, FLConfig, init_state, \
-    make_flat_spec, make_round_fn, run_rounds
+    make_flat_spec, make_round_fn, pool_data, run_rounds
 from repro.core.compact import capacity_for
 from repro.data import make_least_squares
 from repro.launch.roofline import fedback_async_overlap, \
-    fedback_round_hbm_bytes
+    fedback_ragged_round_hbm_bytes, fedback_round_hbm_bytes
 from repro.launch.sweep import init_sweep, make_sweep_fn, SweepGrid
 
 BENCH_DIR = os.environ.get("BENCH_DIR", ".")
@@ -270,6 +270,91 @@ def run(print_fn=print, *, n_clients: int = 1024, n_points: int = 16,
     print_fn(f"fedback_async_parity,"
              f"{int(report['async_parity']['s0_matches_sync_compact'])},"
              f"staleness0_equals_sync")
+
+    # --- ragged heterogeneous clients: Dirichlet-size CSR pool ---------
+    # The same compacted workload with per-client shard sizes drawn from
+    # a Dirichlet over clients (the heterogeneity the rectangular layout
+    # trims away) pooled into one CSR buffer: the solver streams CSR
+    # slices through the capacity slots, so solver rows per round are
+    # unchanged and the HBM data term follows Σnᵢ, not nᵢ·N.
+    r_points = 2 * n_points
+    rdata, rparams0, rloss = make_least_squares(compact_clients, r_points,
+                                                dim, seed=5)
+    size_rng = np.random.default_rng(7)
+    props = size_rng.dirichlet(np.full(compact_clients, 3.0))
+    sizes = np.clip((props * compact_clients * r_points * 0.6).astype(int),
+                    4, r_points)
+    pooled, rrspec = pool_data(
+        [np.asarray(rdata["x"][i])[:s] for i, s in enumerate(sizes)],
+        [np.asarray(rdata["y"][i])[:s] for i, s in enumerate(sizes)])
+    # Conservation, measured on the actual buffers (not the spec, which
+    # is derived from the same inputs): every sliced row landed in the
+    # pool — the regression this flag exists to catch is pool_data (or
+    # a partition layer feeding it) dropping rows.
+    conservation = bool(
+        int(pooled["x"].shape[0]) - rrspec.padding == int(sizes.sum())
+        and int(pooled["y"].shape[0]) - rrspec.padding == int(sizes.sum()))
+    rcfg = _cfg(compact_clients, r_points, participation=rate,
+                compact=True, capacity_slack=slack)
+    rrspec_flat = make_flat_spec(rparams0)
+    rstate = init_state(rcfg, rparams0, spec=rrspec_flat)
+    rrf = make_round_fn(rcfg, rloss, pooled, spec=rrspec_flat,
+                        ragged=rrspec)
+    r_s, r_us, rstate, rhist = _timed_rounds(rrf, rstate, compact_rounds,
+                                             repeats=3)
+    r_solves = capacity_for(compact_clients, rate, slack)
+    # one data row = one x feature vector + its scalar target, fp32
+    row_bytes = 4 * (int(np.prod(rdata["x"].shape[2:])) + 1)
+    rhbm = fedback_ragged_round_hbm_bytes(
+        compact_clients, int(r_solves), rrspec_flat.dim,
+        sizes=rrspec.sizes, row_bytes=row_bytes)
+    # Uniform sizes must reproduce the rectangular compact engine bit
+    # for bit (events AND ω) — surfaced as a benchmark flag so the
+    # nightly compare job catches a ragged-parity regression even
+    # before the test suite runs (same idea as async_parity).
+    updata, upspec = pool_data(
+        [np.asarray(cdata["x"][i]) for i in range(compact_clients)],
+        [np.asarray(cdata["y"][i]) for i in range(compact_clients)])
+    pcfg = _cfg(compact_clients, n_points, participation=rate,
+                compact=True, capacity_slack=slack)
+    pstate_a = init_state(pcfg, cparams0, spec=cspec)
+    pstate_b = init_state(pcfg, cparams0, spec=cspec)
+    prf_a = make_round_fn(pcfg, closs, cdata, spec=cspec)
+    prf_b = make_round_fn(pcfg, closs, updata, spec=cspec, ragged=upspec)
+    pstate_a, phist_a = run_rounds(prf_a, pstate_a, 10)
+    pstate_b, phist_b = run_rounds(prf_b, pstate_b, 10)
+    parity = bool(
+        np.array_equal(np.asarray(phist_a.events),
+                       np.asarray(phist_b.events))
+        and np.array_equal(
+            np.asarray(pstate_a.omega, np.float32).tobytes(),
+            np.asarray(pstate_b.omega, np.float32).tobytes()))
+    rcurve = np.asarray(rhist.train_loss, np.float64)
+    report["ragged_dirichlet"] = {
+        "n_clients": compact_clients, "dim": rrspec_flat.dim,
+        "participation": rate, "capacity_slack": slack,
+        "rounds": compact_rounds + 1,
+        "per_round_us": r_us, "compile_s": r_s,
+        "solves_per_round": int(r_solves),
+        "solver_rows_per_round": int(r_solves),
+        "data_rows_total": rrspec.total,
+        "sizes_min": int(rrspec.min_size),
+        "sizes_max": int(rrspec.max_size),
+        "sizes_mean": float(np.mean(sizes)),
+        "solve_buckets": len(rrspec.buckets),
+        "conservation_ok": conservation,
+        "uniform_parity_bitexact": parity,
+        "modeled_hbm_bytes_per_round": rhbm["total_bytes"],
+        "modeled_solver_hbm_bytes_per_round": rhbm["solver_bytes"],
+        "modeled_server_hbm_bytes_per_round": rhbm["server_bytes"],
+        "train_loss_curve": rcurve.tolist(),
+        "final_train_loss": float(rcurve[-1]),
+    }
+    print_fn(f"fedback_ragged_dirichlet_n{compact_clients},{r_us:.1f},"
+             f"rows={rrspec.total} sizes=[{rrspec.min_size},"
+             f"{rrspec.max_size}] buckets={len(rrspec.buckets)} "
+             f"uniform_parity={int(parity)} "
+             f"final_loss={rcurve[-1]:.5f}")
 
     # --- sweep: seeds x gains as ONE compiled program -------------------
     grid = SweepGrid(seeds=tuple(range(sweep_seeds)),

@@ -1,12 +1,23 @@
 """Paper Table 2: realized average participation rate vs. target L̄ —
-the controller-tracking claim (Thm. 2): sub-1% error on long runs."""
+the controller-tracking claim (Thm. 2): sub-1% error on long runs.
+
+With ``grid=True`` (default; ``--smoke`` selects the tiny always-on
+tier) every rate is advanced in ONE scan-of-vmap program via
+``repro.launch.sweep`` (the target rate is a runtime controller
+override), traces cached under ``experiments/paper/``.
+"""
 from __future__ import annotations
 
-from .common import PRESETS, realized_rate, run_sweep
+import argparse
+
+from .common import PRESETS, realized_rate, run_grid, run_sweep
 
 
-def run(dataset: str = "mnist", preset: str = "quick", rates=None):
+def run(dataset: str = "mnist", preset: str = "quick", rates=None,
+        grid: bool = True):
     rates = rates or PRESETS[preset]["rates"]
+    if grid:
+        run_grid(dataset, "fedback", preset_name=preset, rates=rates)
     rows = []
     for rate in rates:
         trace = run_sweep(dataset, "fedback", rate, preset_name=preset)
@@ -23,3 +34,23 @@ def emit(rows, print_fn=print):
     for r in rows:
         print_fn(f"table2,{r['dataset']},{r['rate']},{r['realized']:.4f},"
                  f"{r['abs_error']:.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "cifar"])
+    ap.add_argument("--preset", default="quick", choices=list(PRESETS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke tier: tiny one-program grid, traces "
+                         "cached under experiments/paper/ (full grids "
+                         "stay nightly)")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="fall back to the per-run python-loop driver")
+    args = ap.parse_args()
+    preset = "smoke" if args.smoke else args.preset
+    emit(run(args.dataset, preset=preset, grid=not args.no_grid))
+
+
+if __name__ == "__main__":
+    main()

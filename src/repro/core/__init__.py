@@ -4,6 +4,12 @@ from repro.utils.flatstate import (  # noqa: F401  (re-export: flat layout)
     flatten_problem,
     make_flat_spec,
 )
+from repro.utils.ragged import (  # noqa: F401  (re-export: ragged shards)
+    RaggedSpec,
+    make_ragged_spec,
+    pool_data,
+    pool_rows,
+)
 from .compact import (  # noqa: F401
     CompactPlan,
     adaptive_limit,

@@ -236,7 +236,8 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
                        *, is_admm: bool, warm_start: bool,
                        use_admm_kernel: bool = False,
                        c_min: int | None = None, adaptive: bool = False,
-                       alpha: float = 0.9) -> Callable:
+                       alpha: float = 0.9, ragged=None,
+                       masked_solver: Callable | None = None) -> Callable:
     """Build the per-shard gather→solve→scatter block.
 
     solver(theta0, center, x, y, idx) -> (theta, mean_loss), vmapped
@@ -255,10 +256,51 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
     engine); state outputs are *service proposals* — the synchronous
     caller uses them as the committed state directly, the async caller
     routes them through the delay pipeline (``engine.staleness_commit``).
+
+    With ``ragged`` (a ``repro.utils.ragged.RaggedSpec``) the block
+    takes two trailing inputs — per-client CSR ``offsets`` and
+    ``sizes`` — and ``x``/``y`` are the *pooled* (Σnᵢ+pad, ...)
+    buffers: each capacity slot slices its client's CSR block out of
+    the pool (``dynamic_slice`` at the static ``max(nᵢ)`` length — the
+    spec's padding guarantees the slice never clamps), so the solver
+    still streams C rows of data, they just come from CSR slices
+    instead of a rectangular gather.  A non-uniform spec routes through
+    ``masked_solver`` (pad-to-max with masked loss); a uniform spec
+    statically selects the unmasked ``solver`` and reproduces the
+    rectangular block bit for bit.
     """
+    masked = ragged is not None and not ragged.uniform
+    if masked and masked_solver is None:
+        raise ValueError("non-uniform ragged compaction needs masked_solver")
+
+    def solve_slots(theta0_rows, center_rows, x, y, keys_rows,
+                    off_rows, size_rows):
+        idx_b = jax.vmap(epoch_fn)(keys_rows)
+        if ragged is None:
+            # x/y here are the slot-gathered (C, nᵢ, ...) rows.
+            return jax.vmap(solver)(theta0_rows, center_rows, x, y, idx_b)
+        # Materialize each slot's (max_size, ...) CSR block — a single
+        # contiguous slice per slot, never crossing into another
+        # client's valid indices (padding keeps the last slices in
+        # bounds; sliced-in neighbor rows beyond a slot's ``size`` are
+        # unreachable: local indices are clamped to size-1).
+        block_len = ragged.max_size
+
+        def slice_rows(buf):
+            return jax.vmap(
+                lambda o: jax.lax.dynamic_slice_in_dim(buf, o, block_len,
+                                                       0))(off_rows)
+
+        x_rows, y_rows = slice_rows(x), slice_rows(y)
+        if masked:
+            return jax.vmap(masked_solver)(
+                theta0_rows, center_rows, x_rows, y_rows,
+                jnp.zeros_like(off_rows), size_rows, idx_b)
+        return jax.vmap(solver)(theta0_rows, center_rows, x_rows, y_rows,
+                                idx_b)
 
     def block(events, distances, eligible, age, qload, theta, lam, z_prev,
-              omega, x, y, keys):
+              omega, x, y, keys, offsets=None, sizes=None):
         limit = (adaptive_limit(qload, c_min, capacity)
                  if adaptive else None)
         plan = compact_plan(events, distances, capacity, age=age,
@@ -284,12 +326,19 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
         theta0_rows = (tree_broadcast_like(omega, capacity) if warm_start
                        else th_rows)
         # Data and PRNG keys flow through the same capacity slots: the
-        # vmapped solver streams C rows of x/y, not N.
-        x_rows = gather_rows(x, plan.idx)
-        y_rows = gather_rows(y, plan.idx)
-        idx_b = jax.vmap(epoch_fn)(gather_rows(keys, plan.idx))
-        th_out_rows, losses = jax.vmap(solver)(
-            theta0_rows, center_rows, x_rows, y_rows, idx_b)
+        # vmapped solver streams C rows of x/y (C CSR slices of the
+        # pooled buffer when ragged), not N.
+        if ragged is None:
+            x_slots, y_slots = gather_rows(x, plan.idx), \
+                gather_rows(y, plan.idx)
+            off_rows = size_rows = None
+        else:
+            x_slots, y_slots = x, y  # pooled; sliced inside the solver
+            off_rows = gather_rows(offsets, plan.idx)
+            size_rows = gather_rows(sizes, plan.idx)
+        th_out_rows, losses = solve_slots(
+            theta0_rows, center_rows, x_slots, y_slots,
+            gather_rows(keys, plan.idx), off_rows, size_rows)
         z_rows = (jax.tree.map(jnp.add, th_out_rows, lam_new_rows)
                   if is_admm else th_out_rows)
 
@@ -304,21 +353,28 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
     return block
 
 
-def shard_mapped_block(block: Callable, mesh, *,
-                       axis: str = "clients") -> Callable:
+def shard_mapped_block(block: Callable, mesh, *, axis: str = "clients",
+                       ragged: bool = False) -> Callable:
     """Run the compact block per-device over the client mesh axis.
 
     Every input except ω is client-stacked (the deferral queue
     included — deferred clients never migrate across shards); the
     per-device commit limits come back stacked (n_shards,) so the
-    caller can sum them into the round's realized capacity.
+    caller can sum them into the round's realized capacity.  With
+    ``ragged`` the x/y inputs are the pooled CSR buffers and stay
+    replicated, while the trailing per-client offsets/sizes shard with
+    the state — the offsets are *global* rows of the replicated pool,
+    so a shard's solves read exactly its own clients' slices and
+    gather/solve/scatter still never cross devices.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     c, r = P(axis), P()
+    data_spec = (r, r) if ragged else (c, c)
+    extra = (c, c) if ragged else ()
     return shard_map(
         block, mesh=mesh,
-        in_specs=(c, c, c, c, c, c, c, c, r, c, c, c),
+        in_specs=(c, c, c, c, c, c, c, c, r) + data_spec + (c,) + extra,
         out_specs=(c, c, c, c, c, c, c, c, c),
         check_rep=False)

@@ -76,6 +76,22 @@ def participant_mean(per_client, events, fallback, num_events=None):
     return jax.tree.map(avg, per_client, fallback)
 
 
+def masked_batch_loss(loss_fn, params, xb, yb, weights):
+    """Weighted mean of per-example losses from a batch-mean ``loss_fn``.
+
+    The ragged engine pads size-bucketed minibatches to the bucket
+    capacity; padding slots must not contribute loss or gradient.  The
+    engine's loss contract is ``loss_fn(params, x, y) -> mean over the
+    batch``, so evaluating it on singleton batches (vmapped over the
+    batch axis) recovers the per-example losses, which are then
+    re-reduced under ``weights`` (0 = padding).  An all-zero weight
+    vector yields 0 loss (and zero gradient) — a no-op solver step.
+    """
+    per = jax.vmap(
+        lambda xe, ye: loss_fn(params, xe[None], ye[None]))(xb, yb)
+    return jnp.sum(per * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
 def participant_mean_loss(losses, events):
     """Mean local train loss among this round's participants ((), fp32)."""
     ev = events.astype(jnp.float32)

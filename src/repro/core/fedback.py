@@ -59,6 +59,23 @@ through an issued-event ring buffer with a 1/(1+δ) feasible-rate
 anti-windup clamp, and ``max_staleness=0`` reproduces the synchronous
 engine bit for bit.  See docs/async.md.
 
+**Ragged heterogeneous shards.**  Pass ``ragged=`` (a
+``repro.utils.ragged.RaggedSpec``) and client data no longer needs
+equal-size shards: all examples live in one pooled ``(Σnᵢ, ...)``
+buffer and the solver gathers minibatches through each client's CSR
+slice (``offsets[i] + local_idx``) — no per-client data rows are ever
+materialized.  The dense path runs one vmapped solve per *size bucket*
+(a few rectangular XLA programs, pad-to-bucket-capacity with masked
+loss via ``engine.masked_batch_loss``); the compacted path streams CSR
+slices through the capacity slots at the static ``max(nᵢ)`` scan shape
+(masked when sizes differ).  Uniform sizes select the unmasked code
+path *statically* and reproduce the rectangular dense and compact
+engines bit for bit — events AND ω (tests/test_ragged.py and the
+ragged golden trace pin this).  Composes with ``spec=`` (flat layout),
+``compact=``, ``max_staleness=`` and ``mesh=`` (the pooled buffer is
+replicated across devices; balance client *rows* onto the mesh with
+``repro.sharding.clients.balanced_permutation``).
+
 **Flat layout.**  Pass ``spec=`` (a ``repro.utils.flatstate.FlatSpec``
 built from the params template) and θ, λ, z_prev live as contiguous
 (N, D) fp32 matrices, ω as a (D,) vector: the trigger kernel reads the
@@ -76,9 +93,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim.sgd import sgd_init, sgd_step
 from repro.utils.flatstate import FlatSpec
+from repro.utils.ragged import RaggedSpec
 from repro.utils.pytree import (
     tree_broadcast_like,
     tree_zeros_like,
@@ -90,6 +109,7 @@ from .engine import (
     consensus_mean,
     dual_ascent,
     gated_commit,
+    masked_batch_loss,
     measured_commits,
     participant_mean,
     participant_mean_loss,
@@ -256,6 +276,53 @@ def _local_solve(loss_fn, theta0, center, x, y, idx, *, rho, lr, momentum):
     return theta, jnp.mean(losses)
 
 
+def _masked_local_solve(loss_fn, theta0, center, x, y, offset, size, idx,
+                        *, rho, lr, momentum):
+    """Inexact prox update over one ragged client's CSR slice.
+
+    ``x``/``y`` are row buffers holding the client's slice at
+    ``offset`` — the whole pooled (Σnᵢ, ...) buffer on the dense
+    bucketed path, or the client's pre-sliced (max(nᵢ), ...) block
+    (offset 0) on the compacted path.  ``idx`` holds virtual per-step
+    indices in [0, bucket capacity).  Virtual rows beyond the client's
+    ``size`` are padding: gathered clamped to the last real row (so
+    every gather stays inside the client's CSR slice) and weighted 0
+    in the per-example loss, so neither loss nor gradient sees them.
+    A step whose batch is *all* padding is skipped outright — params,
+    momentum and the reported mean loss are untouched — so a small
+    client's solve equals a solve over only the steps that carry its
+    data (no extra prox-pull toward the center, no 0-loss dilution of
+    the train-loss metric).  With ``size == capacity`` every weight is
+    1, no step skips, and the update equals :func:`_local_solve` on
+    the same rows.
+    """
+    vg = jax.value_and_grad(
+        lambda params, xb, yb, w: masked_batch_loss(loss_fn, params,
+                                                    xb, yb, w))
+
+    def body(carry, idx_b):
+        params, opt = carry
+        weights = (idx_b < size).astype(jnp.float32)
+        live = jnp.sum(weights) > 0
+        g_idx = offset + jnp.minimum(idx_b, size - 1)
+        xb = jnp.take(x, g_idx, axis=0)
+        yb = jnp.take(y, g_idx, axis=0)
+        loss, g = vg(params, xb, yb, weights)
+        if rho:
+            g = jax.tree.map(lambda gl, p, c: gl + rho * (p - c), g, params,
+                             center)
+        new_params, new_opt = sgd_step(params, g, opt, lr, momentum)
+        keep = lambda nw, od: jnp.where(live, nw, od)  # noqa: E731
+        params = jax.tree.map(keep, new_params, params)
+        opt = jax.tree.map(keep, new_opt, opt)
+        return (params, opt), (loss, live)
+
+    (theta, _), (losses, lives) = jax.lax.scan(
+        body, (theta0, sgd_init(theta0)), idx)
+    lives = lives.astype(jnp.float32)
+    return theta, jnp.sum(losses * lives) / jnp.maximum(jnp.sum(lives), 1.0)
+
+
 def _resolve_kernel_flag(flag: bool | None) -> bool:
     """None → auto: Pallas fast paths on TPU, jnp reference elsewhere
     (interpret-mode kernels validate the program but are slow on CPU)."""
@@ -279,11 +346,15 @@ def _trigger(cfg: FLConfig, state: FLState, mesh, client_axis):
 def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                   *, jit: bool = True, mesh=None,
                   client_axis: str = "clients", donate: bool | None = None,
-                  ctrl_arg: bool = False, spec: FlatSpec | None = None):
+                  ctrl_arg: bool = False, spec: FlatSpec | None = None,
+                  ragged: RaggedSpec | None = None):
     """Build the per-round step.
 
     loss_fn(params, x_batch, y_batch) -> scalar mean loss.
-    data: {"x": (N, n_i, ...), "y": (N, n_i)} — equal-size client shards.
+    data: {"x": (N, n_i, ...), "y": (N, n_i)} — equal-size client
+    shards; or, with ``ragged=``, the pooled {"x": (Σnᵢ, ...),
+    "y": (Σnᵢ,)} buffers whose CSR layout the given
+    ``repro.utils.ragged.RaggedSpec`` describes.
 
     mesh:   optional 1-D ``clients`` mesh; shards all client-stacked
             pytrees (state, data) over its axis and jits with explicit
@@ -302,11 +373,28 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             given ``loss_fn`` still takes the model pytree — it is
             unravelled per client row inside the vmapped solver.
 
+    ragged: CSR pooled-data spec (``repro.utils.ragged.RaggedSpec``);
+            the local solver gathers minibatches through each client's
+            CSR slice of the pooled buffer — size-bucketed vmapped
+            solves on the dense path, slot-gathered slices at the
+            static max(nᵢ) shape on the compacted path.  Uniform sizes
+            reproduce the rectangular engines bit for bit.
+
     Returns round_fn(state[, ctrl_overrides]) -> (state, RoundMetrics).
     """
     n = cfg.n_clients
-    assert data["x"].shape[0] == n, (data["x"].shape, n)
-    n_points = data["x"].shape[1]
+    if ragged is not None:
+        if ragged.n_clients != n:
+            raise ValueError(f"ragged spec describes {ragged.n_clients} "
+                             f"clients, cfg.n_clients={n}")
+        assert data["x"].shape[0] == ragged.buffer_rows, \
+            (data["x"].shape, ragged.buffer_rows)
+        # Static scan shape of slot-gathered (compacted) solves; the
+        # dense path refines this per size bucket.
+        n_points = ragged.max_size
+    else:
+        assert data["x"].shape[0] == n, (data["x"].shape, n)
+        n_points = data["x"].shape[1]
     flat = spec is not None
     use_admm_kernel = flat and _resolve_kernel_flag(cfg.use_admm_kernel)
     select = make_selection(
@@ -327,22 +415,37 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             shard_client_data,
         )
         check_divisible(n, mesh, axis=client_axis)
-        data = shard_client_data(mesh, data, axis=client_axis)
+        if ragged is None:
+            data = shard_client_data(mesh, data, axis=client_axis)
+        else:
+            # The pooled buffer has no client-aligned leading axis: it
+            # stays replicated; per-client offsets shard with the state.
+            from repro.sharding.clients import replicate_data
+            data = replicate_data(mesh, data)
         pin = partial(constrain_clients, mesh=mesh, axis=client_axis)
     else:
         pin = lambda t, **_: t  # noqa: E731
 
     solver = partial(_local_solve, loss_fn, rho=rho, lr=cfg.lr,
                      momentum=cfg.momentum)
+    masked_solver = partial(_masked_local_solve, loss_fn, rho=rho,
+                            lr=cfg.lr, momentum=cfg.momentum)
     if flat:
         # Convert at the solver boundary only: unflatten θ⁰/center once
         # per client, scan the SGD steps in native pytree space (same
         # per-step codegen as the tree layout), flatten the result.
         tree_solver = solver
+        tree_masked_solver = masked_solver
 
         def solver(theta0_vec, center_vec, x, y, idx):
             theta, loss = tree_solver(spec.unflatten(theta0_vec),
                                       spec.unflatten(center_vec), x, y, idx)
+            return spec.flatten(theta), loss
+
+        def masked_solver(theta0_vec, center_vec, x, y, offset, size, idx):
+            theta, loss = tree_masked_solver(
+                spec.unflatten(theta0_vec), spec.unflatten(center_vec),
+                x, y, offset, size, idx)
             return spec.flatten(theta), loss
 
     epoch_fn = partial(_epoch_indices, n_points=n_points,
@@ -360,18 +463,18 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                                    warm_start=cfg.warm_start,
                                    use_admm_kernel=use_admm_kernel,
                                    c_min=c_min, adaptive=adaptive,
-                                   alpha=_ctrl_cfg(cfg).alpha)
+                                   alpha=_ctrl_cfg(cfg).alpha,
+                                   ragged=ragged,
+                                   masked_solver=masked_solver)
         if mesh is not None:
-            block = shard_mapped_block(block, mesh, axis=client_axis)
+            block = shard_mapped_block(block, mesh, axis=client_axis,
+                                       ragged=ragged is not None)
 
     async_mode = cfg.max_staleness is not None
 
-    def dense_client_update(state, events, data_rng):
-        """All-N solve behind the event mask (the bitwise baseline).
-
-        Returns *service proposals* (θ_out, λ⁺, z) — the caller gates
-        them into state (synchronous ``gated_commit``) or routes them
-        through the delay pipeline (``staleness_commit``)."""
+    def _duals_and_centers(state):
+        """λ⁺ and prox centers for every client (shared by the dense
+        rectangular and dense ragged paths)."""
         if is_admm:
             if use_admm_kernel:
                 from repro.kernels import ops
@@ -384,7 +487,15 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         else:
             lam_new = state.lam  # stays zero
             center = tree_broadcast_like(state.omega, n)
+        return lam_new, center
 
+    def dense_client_update(state, events, data_rng):
+        """All-N solve behind the event mask (the bitwise baseline).
+
+        Returns *service proposals* (θ_out, λ⁺, z) — the caller gates
+        them into state (synchronous ``gated_commit``) or routes them
+        through the delay pipeline (``staleness_commit``)."""
+        lam_new, center = _duals_and_centers(state)
         theta_init = (tree_broadcast_like(state.omega, n) if cfg.warm_start
                       else state.theta)
         idx = jax.vmap(epoch_fn)(jax.random.split(data_rng, n))
@@ -396,13 +507,68 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                  else theta_out)
         return theta_out, lam_new, z_new, losses
 
+    def ragged_dense_update(state, events, data_rng):
+        """All-N solve over pooled CSR data, one vmap per size bucket.
+
+        Same service-proposal contract as ``dense_client_update``; the
+        solver streams each client's minibatches straight out of the
+        pooled buffer (global indices ``offset_i + local_idx``), so a
+        uniform spec — one bucket, no padding — reproduces the
+        rectangular dense path bit for bit.
+        """
+        lam_new, center = _duals_and_centers(state)
+        theta_init = pin(tree_broadcast_like(state.omega, n)
+                         if cfg.warm_start else state.theta)
+        center = pin(center)
+        keys = jax.random.split(data_rng, n)
+        theta_out = theta_init  # every row overwritten below
+        losses = jnp.zeros((n,), jnp.float32)
+        for bucket in ragged.buckets:
+            mem = np.asarray(bucket.members)
+            rows = jax.tree.map(lambda a: a[mem], (theta_init, center))
+            bucket_epochs = partial(_epoch_indices,
+                                    n_points=bucket.capacity,
+                                    batch_size=cfg.batch_size,
+                                    epochs=cfg.epochs)
+            idx_v = jax.vmap(bucket_epochs)(keys[mem])
+            offs = jnp.asarray([ragged.offsets[i] for i in bucket.members],
+                               jnp.int32)
+            if bucket.padded:
+                szs = jnp.asarray(
+                    [ragged.sizes[i] for i in bucket.members], jnp.int32)
+                th, ls = jax.vmap(
+                    masked_solver, in_axes=(0, 0, None, None, 0, 0, 0))(
+                    rows[0], rows[1], data["x"], data["y"], offs, szs,
+                    idx_v)
+            else:
+                gidx = offs[:, None, None] + idx_v
+                th, ls = jax.vmap(solver, in_axes=(0, 0, None, None, 0))(
+                    rows[0], rows[1], data["x"], data["y"], gidx)
+            theta_out = jax.tree.map(
+                lambda acc, r: acc.at[mem].set(r.astype(acc.dtype)),
+                theta_out, th)
+            losses = losses.at[mem].set(ls)
+        theta_out = pin(theta_out)
+        z_new = (jax.tree.map(jnp.add, theta_out, lam_new) if is_admm
+                 else theta_out)
+        return theta_out, lam_new, z_new, losses
+
+    # Dynamic-gather companions of the static CSR spec (the compact
+    # plan indexes them by slot; client-stacked, so they shard with the
+    # state under the mesh while the pooled buffer stays replicated).
+    ragged_offsets = ragged.offsets_array() if ragged is not None else None
+    ragged_sizes = ragged.sizes_array() if ragged is not None else None
+
     def compact_client_update(state, events, distances, eligible,
                               data_rng):
         """Gather demand rows into capacity slots, solve C rows, scatter."""
         keys = jax.random.split(data_rng, n)
-        return block(events, distances, eligible, state.queue.age,
-                     state.queue.load, state.theta, state.lam,
-                     state.z_prev, state.omega, data["x"], data["y"], keys)
+        args = (events, distances, eligible, state.queue.age,
+                state.queue.load, state.theta, state.lam,
+                state.z_prev, state.omega, data["x"], data["y"], keys)
+        if ragged is not None:
+            args += (ragged_offsets, ragged_sizes)
+        return block(*args)
 
     def round_body(state: FLState, ctrl_overrides):
         rng, sel_rng, data_rng = jax.random.split(state.rng, 3)
@@ -435,8 +601,10 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             realized_capacity = jnp.sum(limits)
             num_deferred = jnp.sum((q_age > 0).astype(jnp.int32))
         else:
+            client_update = (ragged_dense_update if ragged is not None
+                             else dense_client_update)
             theta_p, lam_p, z_p, losses = \
-                dense_client_update(state, events, data_rng)
+                client_update(state, events, data_rng)
             serviced, loss_mask = events, events
             queue = state.queue
             realized_capacity = jnp.asarray(n, jnp.int32)

@@ -3,5 +3,14 @@ from .synthetic import (  # noqa: F401
     make_synthetic_cifar,
     make_synthetic_mnist,
 )
-from .partition import partition_label_shard, partition_dirichlet  # noqa: F401
-from .pipeline import federated_arrays  # noqa: F401
+from .partition import (  # noqa: F401
+    PartitionStats,
+    label_histogram,
+    partition_dirichlet,
+    partition_label_shard,
+)
+from .pipeline import (  # noqa: F401
+    federated_arrays,
+    federated_pooled,
+    stack_trimmed,
+)

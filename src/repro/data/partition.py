@@ -1,63 +1,123 @@
 """Non-i.i.d. client partitioners (paper §5).
 
-* ``partition_label_shard`` — MNIST setup: each client holds an equal
-  number of points restricted to ``classes_per_client`` unique labels
-  (paper: 2 digits per client, 100 clients).
+* ``partition_label_shard`` — MNIST setup: each client holds points
+  restricted to ``classes_per_client`` unique labels (paper: 2 digits
+  per client, 100 clients).
 * ``partition_dirichlet``  — CIFAR setup: class proportions per client
   drawn from Dirichlet(β) (paper: β = 0.5), following Yurochkin et al. /
   Wang et al.
 
-Both return equal-size shards (largest size that divides evenly; points
-are duplicated-free trimmed) so client states stack into rectangular
-arrays for the vmapped engine.
+Both return **ragged** shards — per-client lists of (nᵢ, ...) arrays —
+plus a :class:`PartitionStats` record.  Nothing is trimmed: the old
+``_equalize`` step silently dropped examples to force equal-size shards
+for the rectangular engine, flattening exactly the per-client imbalance
+the paper says drives participation dynamics.  The partitioners now
+guarantee **conservation** (Σnᵢ equals the dataset size, asserted at
+return) and the ragged CSR substrate (``repro.utils.ragged``) carries
+the heterogeneity all the way into the round engine.  Rectangular
+consumers stack-and-trim explicitly via
+``repro.data.pipeline.stack_trimmed`` — a visible, accounted-for loss
+instead of a silent one.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import numpy as np
 
 
-def _equalize(shards_x, shards_y, rng):
-    n_min = min(len(y) for y in shards_y)
-    xs, ys = [], []
-    for x, y in zip(shards_x, shards_y):
-        idx = rng.permutation(len(y))[:n_min]
-        xs.append(x[idx])
-        ys.append(y[idx])
-    return np.stack(xs), np.stack(ys)
+class PartitionStats(NamedTuple):
+    """Heterogeneity accounting of one partition.
+
+    ``dropped`` exists to make the conservation guarantee auditable: the
+    ragged partitioners always report 0 (and assert it); only an
+    explicit downstream ``stack_trimmed`` ever loses points.
+    """
+
+    sizes: np.ndarray  # (N,) int64 — per-client shard sizes nᵢ
+    label_histogram: np.ndarray  # (N, C) int64 — per-client label counts
+    dropped: int  # examples lost by the partition itself (always 0)
+
+    @property
+    def total(self) -> int:
+        return int(self.sizes.sum())
+
+
+def label_histogram(y_shards, num_classes: int) -> np.ndarray:
+    """(N, C) label counts — works on ragged shard lists and on stacked
+    (N, nᵢ) arrays alike; used by tests/examples to show non-iid-ness."""
+    return np.stack([
+        np.bincount(np.asarray(ys).ravel(), minlength=num_classes)
+        for ys in y_shards
+    ])
+
+
+def _finalize(x, y, client_idx, num_classes: int):
+    """Materialize ragged shards + stats; assert conservation."""
+    shards_x = [x[np.asarray(ci, dtype=np.intp)] for ci in client_idx]
+    shards_y = [y[np.asarray(ci, dtype=np.intp)] for ci in client_idx]
+    sizes = np.asarray([len(ci) for ci in client_idx], np.int64)
+    stats = PartitionStats(
+        sizes=sizes,
+        label_histogram=label_histogram(shards_y, num_classes),
+        dropped=len(y) - int(sizes.sum()))
+    assert stats.dropped == 0, \
+        f"partition dropped {stats.dropped} of {len(y)} examples"
+    return shards_x, shards_y, stats
 
 
 def partition_label_shard(x, y, *, n_clients: int, classes_per_client: int = 2,
                           seed: int = 0):
     """Each client gets shards from exactly `classes_per_client` labels.
 
-    Returns (x_shards, y_shards): (N, n_i, ...) equal-size arrays.
+    Returns ``(x_shards, y_shards, stats)``: ragged per-client lists
+    (every example assigned to exactly one client) + PartitionStats.
+    Each client holds exactly ``classes_per_client`` distinct labels (a
+    client's shards are dealt N positions apart from a class-major pool,
+    and no class spans more than N consecutive pool slots, so the same
+    class can never hit one client twice) — provided every class has at
+    least as many examples as its shard count, ≈ N·cpc/num_classes
+    (``np.array_split`` hands out empty shards for rarer classes, which
+    only weakens "exactly" to "at most"; conservation always holds).
     """
     rng = np.random.default_rng(seed)
     num_classes = int(y.max()) + 1
-    # Split each class into contiguous shards; deal 'classes_per_client'
-    # shards to each client (the classic FedAvg pathological split).
+    if classes_per_client > num_classes:
+        raise ValueError(f"classes_per_client={classes_per_client} exceeds "
+                         f"the {num_classes} classes present")
+    # Split the classes into exactly n_clients * classes_per_client
+    # shards (spread the remainder over the first classes) — the pool
+    # covers every example, so the deal conserves the dataset.
     total_shards = n_clients * classes_per_client
-    shards_per_class = max(-(-total_shards // num_classes), 1)  # ceil
-    by_class = [np.flatnonzero(y == c) for c in range(num_classes)]
-    for idx in by_class:
-        rng.shuffle(idx)
+    if total_shards < num_classes:
+        raise ValueError(
+            f"{total_shards} shards cannot cover {num_classes} classes "
+            "without dropping data; raise n_clients or classes_per_client")
+    base, extra = divmod(total_shards, num_classes)
     shard_pool = []
-    for c, idx in enumerate(by_class):
-        for s in np.array_split(idx, shards_per_class):
-            shard_pool.append((c, s))
-    rng.shuffle(shard_pool)
-    shards_x, shards_y = [], []
-    for i in range(n_clients):
-        take = shard_pool[i * classes_per_client:(i + 1) * classes_per_client]
-        idx = np.concatenate([s for _, s in take])
-        shards_x.append(x[idx])
-        shards_y.append(y[idx])
-    return _equalize(shards_x, shards_y, rng)
+    for c in range(num_classes):
+        idx = np.flatnonzero(y == c)
+        rng.shuffle(idx)
+        for s in np.array_split(idx, base + (1 if c < extra else 0)):
+            shard_pool.append(s)
+    # Deal class-major: (shuffled) client i takes pool slots i, i+N, ...
+    order = rng.permutation(n_clients)
+    client_idx = [
+        np.concatenate([shard_pool[i + k * n_clients]
+                        for k in range(classes_per_client)])
+        for i in order
+    ]
+    return _finalize(x, y, client_idx, num_classes)
 
 
 def partition_dirichlet(x, y, *, n_clients: int, beta: float = 0.5,
                         seed: int = 0, min_points: int = 8):
-    """Dirichlet(β) label-proportion split (Li et al. 2021)."""
+    """Dirichlet(β) label-proportion split (Li et al. 2021).
+
+    Returns ``(x_shards, y_shards, stats)`` — ragged, conservation
+    guaranteed (every example lands on exactly one client; redraws until
+    every client holds ≥ ``min_points``).
+    """
     rng = np.random.default_rng(seed)
     num_classes = int(y.max()) + 1
     while True:
@@ -71,13 +131,4 @@ def partition_dirichlet(x, y, *, n_clients: int, beta: float = 0.5,
                 client_idx[i].extend(part.tolist())
         if min(len(ci) for ci in client_idx) >= min_points:
             break
-    shards_x = [x[np.asarray(ci)] for ci in client_idx]
-    shards_y = [y[np.asarray(ci)] for ci in client_idx]
-    return _equalize(shards_x, shards_y, rng)
-
-
-def label_histogram(y_shards, num_classes: int) -> np.ndarray:
-    """(N, C) label counts — used by tests to assert non-iid-ness."""
-    return np.stack([
-        np.bincount(ys, minlength=num_classes) for ys in y_shards
-    ])
+    return _finalize(x, y, client_idx, num_classes)

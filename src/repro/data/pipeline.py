@@ -1,35 +1,107 @@
-"""Federated data pipeline glue."""
+"""Federated data pipeline glue.
+
+Two layouts feed the round engine:
+
+* **ragged / pooled (lossless)** — :func:`federated_pooled` keeps the
+  partitioners' full heterogeneous shards: all examples live in one
+  pooled ``(Σnᵢ, ...)`` buffer indexed by a static CSR
+  :class:`repro.utils.ragged.RaggedSpec` (pass it to ``make_round_fn``
+  as ``ragged=``).  Conservation holds by construction — Σnᵢ equals the
+  dataset size.
+* **rectangular (legacy, visibly lossy)** — :func:`federated_arrays`
+  stacks equal-size ``(N, nᵢ, ...)`` shards by trimming every client to
+  the smallest shard (:func:`stack_trimmed`).  This is the old
+  ``_equalize`` behavior moved where the loss is explicit: the
+  partition itself never drops data any more, only this stacking step
+  does, and it reports how many points it threw away.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.ragged import pool_data
 from .partition import partition_dirichlet, partition_label_shard
 from .synthetic import Dataset
+
+
+def stack_trimmed(shards_x, shards_y, *, seed: int = 0):
+    """Ragged shards → equal-size stacked arrays by per-client trimming.
+
+    Keeps a uniform random ``n_min``-subset of each client's shard
+    (n_min = the smallest shard).  Returns ``(xs, ys, dropped)`` where
+    ``dropped`` counts the examples the rectangular layout cost — the
+    loss the ragged pooled path exists to avoid.
+    """
+    rng = np.random.default_rng(seed)
+    n_min = min(len(s) for s in shards_y)
+    xs, ys, total = [], [], 0
+    for sx, sy in zip(shards_x, shards_y):
+        idx = rng.permutation(len(sy))[:n_min]
+        xs.append(np.asarray(sx)[idx])
+        ys.append(np.asarray(sy)[idx])
+        total += len(sy)
+    return np.stack(xs), np.stack(ys), total - n_min * len(shards_y)
+
+
+def _partition(ds: Dataset, *, n_clients: int, scheme: str,
+               classes_per_client: int, beta: float, seed: int):
+    """Ragged shards + stats for any scheme (iid included)."""
+    if scheme == "label_shard":
+        return partition_label_shard(
+            ds.x_train, ds.y_train, n_clients=n_clients,
+            classes_per_client=classes_per_client, seed=seed)
+    if scheme == "dirichlet":
+        return partition_dirichlet(
+            ds.x_train, ds.y_train, n_clients=n_clients, beta=beta,
+            seed=seed)
+    if scheme == "iid":
+        from .partition import _finalize
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(len(ds.y_train))
+        client_idx = np.array_split(idx, n_clients)
+        num_classes = int(ds.y_train.max()) + 1
+        return _finalize(ds.x_train, ds.y_train, client_idx, num_classes)
+    raise ValueError(f"unknown scheme {scheme}")
 
 
 def federated_arrays(ds: Dataset, *, n_clients: int, scheme: str = "label_shard",
                      classes_per_client: int = 2, beta: float = 0.5,
                      seed: int = 0):
-    """Partition a Dataset into device arrays for the round engine.
+    """Partition a Dataset into rectangular device arrays (legacy layout).
 
     Returns (data, test) where data = {"x": (N, n_i, ...), "y": (N, n_i)}.
+    Shards are trimmed to the smallest client (`stack_trimmed`) — use
+    :func:`federated_pooled` for the lossless ragged layout.
     """
-    if scheme == "label_shard":
-        xs, ys = partition_label_shard(
-            ds.x_train, ds.y_train, n_clients=n_clients,
-            classes_per_client=classes_per_client, seed=seed)
-    elif scheme == "dirichlet":
-        xs, ys = partition_dirichlet(
-            ds.x_train, ds.y_train, n_clients=n_clients, beta=beta, seed=seed)
-    elif scheme == "iid":
-        rng = np.random.default_rng(seed)
-        idx = rng.permutation(len(ds.y_train))
-        n_i = len(idx) // n_clients
-        idx = idx[: n_i * n_clients].reshape(n_clients, n_i)
-        xs, ys = ds.x_train[idx], ds.y_train[idx]
-    else:
-        raise ValueError(f"unknown scheme {scheme}")
+    shards_x, shards_y, _ = _partition(
+        ds, n_clients=n_clients, scheme=scheme,
+        classes_per_client=classes_per_client, beta=beta, seed=seed)
+    xs, ys, _ = stack_trimmed(shards_x, shards_y, seed=seed)
     data = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
     test = {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}
     return data, test
+
+
+def federated_pooled(ds: Dataset, *, n_clients: int,
+                     scheme: str = "dirichlet", classes_per_client: int = 2,
+                     beta: float = 0.5, seed: int = 0, max_buckets: int = 4):
+    """Partition a Dataset into the pooled ragged layout (lossless).
+
+    Returns ``(data, test, spec, stats)``:
+
+    * data = {"x": (Σnᵢ, ...), "y": (Σnᵢ,)} — one pooled buffer, every
+      training example present exactly once (Σnᵢ == len(y_train));
+    * spec — the static CSR :class:`RaggedSpec` (pass to
+      ``make_round_fn(..., ragged=spec)``);
+    * stats — :class:`repro.data.partition.PartitionStats` (per-client
+      sizes, label histogram, dropped == 0).
+    """
+    shards_x, shards_y, stats = _partition(
+        ds, n_clients=n_clients, scheme=scheme,
+        classes_per_client=classes_per_client, beta=beta, seed=seed)
+    data, spec = pool_data(shards_x, shards_y, max_buckets=max_buckets)
+    assert spec.total == len(ds.y_train) and stats.dropped == 0, \
+        (spec.total, len(ds.y_train), stats.dropped)
+    test = {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}
+    return data, test, spec, stats

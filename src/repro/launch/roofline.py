@@ -101,6 +101,45 @@ def fedback_round_hbm_bytes(n_clients: int, solver_rows: int, dim: int,
     }
 
 
+def fedback_ragged_round_hbm_bytes(n_clients: int, solver_rows: int,
+                                   dim: int, *, sizes,
+                                   row_bytes: int,
+                                   dtype_bytes: int = 4) -> dict[str, int]:
+    """Ragged variant of :func:`fedback_round_hbm_bytes`.
+
+    With heterogeneous shards the solver's data term is governed by the
+    pooled row count Σnᵢ, not by nᵢ·N: the dense ragged round (solver
+    rows = N) streams every client's CSR slice once — Σnᵢ·row_bytes —
+    via per-batch gathers from the pool.  The compacted round
+    (solver_rows < N) materializes one *static* ``max(nᵢ)``-length
+    block slice per capacity slot (``core.compact.solve_slots``), so
+    its honest data term is ``solver_rows · max(nᵢ) · row_bytes`` —
+    rows sliced, not merely rows used; the two coincide for uniform
+    sizes.  State terms are unchanged (state rows are (N, D) regardless
+    of shard sizes).  ``sizes`` is the per-client row-count sequence
+    (``RaggedSpec.sizes``); ``row_bytes`` the bytes of one data row
+    (x and y together).
+    """
+    base = fedback_round_hbm_bytes(n_clients, solver_rows, dim,
+                                   data_bytes_per_client=0,
+                                   dtype_bytes=dtype_bytes)
+    sizes = tuple(int(s) for s in sizes)
+    total_rows = sum(sizes)
+    if solver_rows >= n_clients:  # dense: every CSR slice, streamed once
+        solver_data = total_rows * row_bytes
+    else:  # compacted: static max-length block slice per slot
+        solver_data = solver_rows * max(sizes) * row_bytes
+    return {
+        "server_bytes": base["server_bytes"],
+        "solver_state_bytes": base["solver_state_bytes"],
+        "solver_data_bytes": solver_data,
+        "solver_bytes": base["solver_state_bytes"] + solver_data,
+        "total_bytes": base["server_bytes"] + base["solver_state_bytes"]
+        + solver_data,
+        "data_rows_total": total_rows,
+    }
+
+
 def fedback_round_memory_s(n_clients: int, solver_rows: int, dim: int,
                            *, data_bytes_per_client: int = 0,
                            dtype_bytes: int = 4) -> float:

@@ -32,6 +32,11 @@ the same way: per-run in-flight payloads and issued-event rings are
 just more (runs, N, ...) carry leaves, with ``history.num_inflight`` /
 ``history.num_landed`` per run.
 
+Ragged heterogeneous shards (``repro.utils.ragged``) compose too: the
+pooled CSR buffer is run-independent like the rectangular shards, so
+``make_sweep_fn(..., ragged=spec)`` vmaps state over runs while every
+run reads the same pool (``--ragged`` on the CLI).
+
 CLI demo (quadratic problem, prints per-run realized rates):
 
     PYTHONPATH=src python -m repro.launch.sweep --n-clients 64 \
@@ -87,7 +92,7 @@ def init_sweep(cfg: FLConfig, params0, grid: SweepGrid, *, spec=None):
 
 def make_sweep_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                   *, rounds: int, jit: bool = True, mesh=None,
-                  client_axis: str = "clients", spec=None):
+                  client_axis: str = "clients", spec=None, ragged=None):
     """Build sweep_fn(states, overrides) -> (final_states, history).
 
     states/overrides come from :func:`init_sweep`; leaves carry a
@@ -95,16 +100,22 @@ def make_sweep_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
     one jit — XLA sees a single scan-of-vmap and compiles once.  With
     ``spec`` the round runs on the flat (N, D) client-state layout
     (``cfg.compact`` composes: the capacity gather/solve/scatter is
-    vmapped over the run axis like everything else).
+    vmapped over the run axis like everything else).  With ``ragged``
+    (a ``repro.utils.ragged.RaggedSpec``) ``data`` is the pooled CSR
+    buffer — run-independent like the rectangular shards, so the sweep
+    vmaps state while every run reads the same pool.
     """
     if mesh is not None:
-        from repro.sharding.clients import check_divisible, shard_client_data
+        from repro.sharding.clients import check_divisible, \
+            replicate_data, shard_client_data
         check_divisible(cfg.n_clients, mesh, axis=client_axis)
         # Commit the (run-independent) client shards to the mesh so GSPMD
-        # reads them sharded instead of replicating a full copy per device.
-        data = shard_client_data(mesh, data, axis=client_axis)
+        # reads them sharded instead of replicating a full copy per device
+        # (the ragged pool has no client axis and stays replicated).
+        data = (replicate_data(mesh, data) if ragged is not None
+                else shard_client_data(mesh, data, axis=client_axis))
     round_fn = make_round_fn(cfg, loss_fn, data, jit=False, ctrl_arg=True,
-                             spec=spec)
+                             spec=spec, ragged=ragged)
     vround = jax.vmap(round_fn, in_axes=(0, 0))
 
     def sweep_fn(states, overrides):
@@ -132,7 +143,7 @@ def run_sweep(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
               seeds: Sequence[int] = (0, 1, 2, 3),
               gains: Sequence[float] | None = None,
               target_rates: Sequence[float] | None = None,
-              mesh=None, spec=None):
+              mesh=None, spec=None, ragged=None):
     """One-call convenience: returns (runs, final_states, history)."""
     grid = SweepGrid(seeds=tuple(seeds),
                      gains=tuple(gains) if gains is not None else None,
@@ -140,7 +151,7 @@ def run_sweep(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                                    if target_rates is not None else None))
     states, overrides, runs = init_sweep(cfg, params0, grid, spec=spec)
     sweep_fn = make_sweep_fn(cfg, loss_fn, data, rounds=rounds, mesh=mesh,
-                             spec=spec)
+                             spec=spec, ragged=ragged)
     final_states, history = sweep_fn(states, overrides)
     return runs, final_states, history
 
@@ -172,6 +183,13 @@ def main():
                          "per-client delay schedule; 0 = async pipeline "
                          "that reproduces the synchronous engine bit for "
                          "bit; omit for the synchronous engine)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="heterogeneous client shards: per-client sizes "
+                         "drawn seed-deterministically in [n/2, n] points "
+                         "and pooled into one CSR buffer "
+                         "(repro.utils.ragged) — the engine runs "
+                         "size-bucketed masked solves instead of one "
+                         "rectangular vmap")
     args = ap.parse_args()
 
     import numpy as np
@@ -186,6 +204,19 @@ def main():
                    max_staleness=args.max_staleness,
                    controller=ControllerConfig(K=0.2, alpha=0.9))
     data, params0, loss_fn = make_least_squares(args.n_clients)
+    ragged = None
+    if args.ragged:
+        from repro.utils.ragged import pool_data
+        n_pts = data["x"].shape[1]
+        sizes = np.random.default_rng(0).integers(
+            max(n_pts // 2, 1), n_pts + 1, size=args.n_clients)
+        data, ragged = pool_data(
+            [np.asarray(data["x"][i])[:s] for i, s in enumerate(sizes)],
+            [np.asarray(data["y"][i])[:s] for i, s in enumerate(sizes)])
+        print(f"# ragged: {ragged.total} pooled rows over "
+              f"{args.n_clients} clients, sizes in "
+              f"[{ragged.min_size}, {ragged.max_size}], "
+              f"{len(ragged.buckets)} solve buckets")
     spec = None if args.tree_layout else make_flat_spec(params0)
     seeds = [int(s) for s in args.seeds.split(",")]
     gains = ([float(g) for g in args.gains.split(",")]
@@ -197,7 +228,8 @@ def main():
 
     runs, final, hist = run_sweep(cfg, loss_fn, data, params0,
                                   rounds=args.rounds, seeds=seeds,
-                                  gains=gains, mesh=mesh, spec=spec)
+                                  gains=gains, mesh=mesh, spec=spec,
+                                  ragged=ragged)
     rates = np.asarray(jnp.mean(
         hist.events.astype(jnp.float32), axis=(0, 2)))
     slacks = np.asarray(jnp.mean(hist.realized_slack, axis=0))

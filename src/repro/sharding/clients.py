@@ -112,6 +112,55 @@ def shard_client_data(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):
     return jax.device_put(data, client_data_shardings(mesh, data, axis=axis))
 
 
+def replicate_data(mesh: Mesh, data):
+    """``device_put`` data replicated across the mesh.
+
+    The ragged engine's pooled (Σnᵢ, ...) buffer has no client-aligned
+    leading axis, so it cannot shard over the ``clients`` axis; it is
+    committed replicated (every device reads only its own clients' CSR
+    slices out of it — the per-client offsets shard with the state).
+    """
+    return jax.tree.map(lambda x: jax.device_put(x, _replicated(mesh)),
+                        data)
+
+
+def balanced_permutation(sizes, n_shards: int) -> np.ndarray:
+    """Client order that balances total data *rows* across mesh shards.
+
+    The ``clients`` mesh always splits the stacked state into
+    ``n_shards`` equal-count contiguous blocks — with equal-size shards
+    that also balances work, but ragged clients make client count a bad
+    proxy for solver rows.  This returns a permutation (apply it to the
+    client order *before* pooling: re-pool shards in this order and
+    ``init_state`` as usual) such that each contiguous block of
+    N/n_shards clients carries a near-equal Σnᵢ: clients are dealt
+    largest-first onto the currently lightest block (LPT greedy, ≤ 4/3
+    OPT makespan), deterministically.
+
+    Returns an (N,) intp array ``perm`` — new position j holds old
+    client ``perm[j]``.
+    """
+    sizes = np.asarray(sizes)
+    n = len(sizes)
+    if n % n_shards:
+        raise ValueError(f"{n} clients do not divide into {n_shards} "
+                         "equal-count mesh blocks")
+    per_block = n // n_shards
+    # Largest-first deal onto the lightest non-full block; ties broken
+    # by block index so the permutation is deterministic.
+    order = np.argsort(-sizes, kind="stable")
+    blocks: list[list[int]] = [[] for _ in range(n_shards)]
+    loads = np.zeros(n_shards, np.int64)
+    for client in order:
+        open_blocks = [b for b in range(n_shards)
+                       if len(blocks[b]) < per_block]
+        b = min(open_blocks, key=lambda i: (loads[i], i))
+        blocks[b].append(int(client))
+        loads[b] += int(sizes[client])
+    # Ascending client index inside each block keeps the layout stable.
+    return np.concatenate([np.sort(b) for b in blocks]).astype(np.intp)
+
+
 def constrain_clients(tree, mesh: Mesh | None, *, axis: str = CLIENT_AXIS):
     """Pin the leading client axis of stacked intermediates inside a
     jitted round.  No-op when ``mesh`` is None so the single-device

@@ -1,0 +1,215 @@
+"""Ragged client shards: a CSR codec over one pooled data buffer.
+
+FedBack's premise is that clients make *heterogeneous* local progress —
+yet a client-stacked ``(N, n_i, ...)`` data layout forces equal-size
+shards, and trimming shards to the minimum size throws away exactly the
+per-client imbalance that drives participation dynamics (Wang & Ji
+2022; Chen et al. 2020).  This module is the substrate that retires the
+rectangular assumption:
+
+* all clients' examples live in **one pooled** ``(Σnᵢ, ...)`` buffer
+  (row-major, client-contiguous), and
+* :class:`RaggedSpec` is the static CSR index — per-client ``offsets``
+  and ``sizes`` — describing which rows belong to whom.
+
+Like ``repro.utils.flatstate.FlatSpec``, the spec is a frozen, hashable
+dataclass built from *python ints only*, so jitted round programs close
+over it without retracing and every offset lowers to an XLA constant.
+The round engine never materializes per-client shards: the scanned SGD
+solver already gathers minibatches by index (``jnp.take(x, idx)``), so
+feeding it the pooled buffer with **global** indices
+``offsets[i] + local_idx`` reads exactly the same fp32 values as the
+rectangular layout — which is why uniform sizes reproduce the dense and
+compacted engines bit for bit (events AND ω; pinned by the golden
+traces and tests/test_ragged.py).
+
+**Size buckets.**  Vmapping one solver over clients needs one static
+scan length, but ragged clients have ragged epoch lengths.  The spec
+groups clients into at most ``max_buckets`` size buckets; each bucket
+runs one rectangular vmapped program at the bucket's capacity
+(pad-to-bucket-max with masked loss — see ``repro.core.fedback``), so
+XLA sees a few rectangular programs, not N.  A bucket whose members all
+match its capacity carries no padding and is *statically* known to need
+no mask — the uniform case degenerates to today's engine, same code
+path, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RaggedBucket:
+    """One rectangular solve program of a ragged round (static)."""
+
+    capacity: int  # padded shard size the bucket's program is traced at
+    members: tuple[int, ...]  # client indices, ascending
+    padded: bool  # any member smaller than the capacity (needs the mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class RaggedSpec:
+    """Static CSR layout of N client shards pooled into (Σnᵢ, ...) rows.
+
+    Hashable (tuples of python ints), so it can be closed over by jitted
+    programs and used as a jit static argument — exactly like
+    ``FlatSpec``.
+    """
+
+    sizes: tuple[int, ...]  # n_i per client
+    offsets: tuple[int, ...]  # CSR row offsets: offsets[i] = Σ_{j<i} n_j
+    buckets: tuple[RaggedBucket, ...]  # size-bucketed solve plan
+
+    # --- static views ---------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def total(self) -> int:
+        """Σ nᵢ — the pooled buffer's leading dim (conservation anchor)."""
+        return self.offsets[-1] + self.sizes[-1] if self.sizes else 0
+
+    @property
+    def max_size(self) -> int:
+        return max(self.sizes) if self.sizes else 0
+
+    @property
+    def min_size(self) -> int:
+        return min(self.sizes) if self.sizes else 0
+
+    @property
+    def uniform(self) -> bool:
+        """True iff every client holds the same number of rows — the
+        degenerate case that must reproduce the rectangular engine bit
+        for bit."""
+        return len(set(self.sizes)) <= 1
+
+    @property
+    def padding(self) -> int:
+        """Zero rows appended after the last client's slice so that a
+        static ``max(nᵢ)``-length block slice starting at *any* client's
+        offset stays in bounds (``dynamic_slice`` would otherwise clamp
+        the start and silently shift the window).  0 for uniform specs.
+        """
+        return self.max_size - self.sizes[-1] if self.sizes else 0
+
+    @property
+    def buffer_rows(self) -> int:
+        """Leading dim of the pooled buffer: Σnᵢ + padding.  The data
+        rows are still exactly ``total`` — padding rows are never
+        addressed by any client's CSR slice."""
+        return self.total + self.padding
+
+    def client_slice(self, i: int) -> slice:
+        """Host-side CSR slice of client i's rows in the pooled buffer."""
+        return slice(self.offsets[i], self.offsets[i] + self.sizes[i])
+
+    # --- device-side index vectors --------------------------------------
+    def offsets_array(self) -> jnp.ndarray:
+        """(N,) int32 row offsets — the dynamic-gather companion of the
+        static spec (the compacted engine indexes it by plan slot)."""
+        return jnp.asarray(self.offsets, jnp.int32)
+
+    def sizes_array(self) -> jnp.ndarray:
+        """(N,) int32 per-client sizes."""
+        return jnp.asarray(self.sizes, jnp.int32)
+
+    # --- codec ----------------------------------------------------------
+    def split(self, pooled) -> list:
+        """Pooled (Σnᵢ, ...) array → list of per-client (nᵢ, ...) views."""
+        return [np.asarray(pooled)[self.client_slice(i)]
+                for i in range(self.n_clients)]
+
+    def permute(self, perm: Sequence[int]) -> "RaggedSpec":
+        """Spec for the client order ``perm`` (new client j is old
+        ``perm[j]``) — used with :func:`pool_rows` after mesh balancing;
+        re-pool the shards in the same order so rows stay contiguous."""
+        return make_ragged_spec([self.sizes[int(p)] for p in perm],
+                                max_buckets=max(len(self.buckets), 1))
+
+
+def _bucket_plan(sizes: Sequence[int],
+                 max_buckets: int) -> tuple[RaggedBucket, ...]:
+    """Deterministic size-bucket assignment.
+
+    Capacities are the unique shard sizes when few, else the maxima of
+    ``max_buckets`` contiguous groups of the sorted unique sizes; each
+    client joins the smallest bucket that fits its shard.  Members stay
+    in ascending client order, so a uniform spec yields one bucket whose
+    member list is exactly ``range(N)`` — the identity layout the
+    bit-for-bit parity relies on.
+    """
+    uniq = sorted(set(int(s) for s in sizes))
+    if len(uniq) <= max_buckets:
+        caps = uniq
+    else:
+        caps = [int(group[-1])
+                for group in np.array_split(np.asarray(uniq), max_buckets)
+                if len(group)]
+    buckets = []
+    for cap in caps:
+        members = tuple(i for i, s in enumerate(sizes)
+                        if s <= cap and not any(s <= c for c in caps
+                                                if c < cap))
+        if members:
+            buckets.append(RaggedBucket(
+                capacity=cap, members=members,
+                padded=any(sizes[i] < cap for i in members)))
+    return tuple(buckets)
+
+
+def make_ragged_spec(sizes: Iterable[int], *,
+                     max_buckets: int = 4) -> RaggedSpec:
+    """Build the static CSR spec for per-client shard sizes ``sizes``."""
+    sizes = tuple(int(s) for s in sizes)
+    if not sizes:
+        raise ValueError("ragged spec needs at least one client")
+    if any(s <= 0 for s in sizes):
+        raise ValueError(f"client shard sizes must be positive: {sizes}")
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
+    return RaggedSpec(sizes=sizes, offsets=offsets,
+                      buckets=_bucket_plan(sizes, max_buckets))
+
+
+def pool_rows(shards: Sequence, *, max_buckets: int = 4):
+    """Concatenate per-client (nᵢ, ...) shards into the pooled buffer.
+
+    Returns ``(pooled, spec)`` with ``pooled.shape[0] ==
+    spec.buffer_rows``: the first ``spec.total`` rows are every example
+    of every shard in client order — none dropped (the conservation
+    guarantee the partitioners assert) — followed by ``spec.padding``
+    zero rows that keep static block slices in bounds (see
+    :attr:`RaggedSpec.padding`; no CSR slice ever addresses them).
+    """
+    shards = [np.asarray(s) for s in shards]
+    spec = make_ragged_spec([len(s) for s in shards],
+                            max_buckets=max_buckets)
+    parts = list(shards)
+    if spec.padding:
+        parts.append(np.zeros((spec.padding,) + shards[0].shape[1:],
+                              shards[0].dtype))
+    pooled = np.concatenate(parts, axis=0)
+    assert pooled.shape[0] == spec.buffer_rows, \
+        (pooled.shape, spec.buffer_rows)
+    return pooled, spec
+
+
+def pool_data(xs: Sequence, ys: Sequence, *, max_buckets: int = 4):
+    """Pool parallel x/y shard lists into a round-engine data dict.
+
+    Returns ``(data, spec)`` where ``data = {"x": (Σnᵢ, ...),
+    "y": (Σnᵢ,)}`` jnp arrays share one spec (x/y shard lengths must
+    agree per client).
+    """
+    if [len(s) for s in xs] != [len(s) for s in ys]:
+        raise ValueError("x and y shard sizes disagree")
+    pooled_x, spec = pool_rows(xs, max_buckets=max_buckets)
+    pooled_y, _ = pool_rows(ys, max_buckets=max_buckets)
+    return {"x": jnp.asarray(pooled_x), "y": jnp.asarray(pooled_y)}, spec

@@ -1,12 +1,15 @@
-"""Data pipeline: synthetic sets, non-iid partitioners, determinism."""
+"""Data pipeline: synthetic sets, ragged non-iid partitioners,
+conservation, determinism, and the pooled CSR layout."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (
     federated_arrays,
+    federated_pooled,
     make_synthetic_cifar,
     make_synthetic_mnist,
+    stack_trimmed,
 )
 from repro.data.partition import (
     label_histogram,
@@ -40,35 +43,67 @@ class TestSynthetic:
 
 
 class TestLabelShard:
-    def test_each_client_has_at_most_two_classes(self):
+    def test_exactly_classes_per_client(self):
         ds = make_synthetic_mnist(n_train=4000, n_test=100)
-        xs, ys = partition_label_shard(ds.x_train, ds.y_train, n_clients=20,
-                                       classes_per_client=2, seed=0)
+        xs, ys, stats = partition_label_shard(
+            ds.x_train, ds.y_train, n_clients=20, classes_per_client=2,
+            seed=0)
         hist = label_histogram(ys, 10)
-        assert ((hist > 0).sum(axis=1) <= 2).all()
+        # exactly 2 distinct labels per client (class-major deal: the
+        # same class can never land twice on one client)
+        assert ((hist > 0).sum(axis=1) == 2).all()
+        np.testing.assert_array_equal(hist, stats.label_histogram)
 
-    def test_equal_shard_sizes(self):
+    def test_conservation_and_stats(self):
         ds = make_synthetic_mnist(n_train=4000, n_test=100)
-        xs, ys = partition_label_shard(ds.x_train, ds.y_train, n_clients=20)
-        assert xs.shape[0] == 20 and xs.shape[1] == ys.shape[1]
+        xs, ys, stats = partition_label_shard(ds.x_train, ds.y_train,
+                                              n_clients=20)
+        assert stats.dropped == 0
+        assert stats.total == 4000
+        assert sum(len(y) for y in ys) == 4000
+        assert [len(x) for x in xs] == list(stats.sizes)
+
+    def test_deterministic_under_seed(self):
+        ds = make_synthetic_mnist(n_train=3000, n_test=100)
+        a = partition_label_shard(ds.x_train, ds.y_train, n_clients=10,
+                                  seed=3)
+        b = partition_label_shard(ds.x_train, ds.y_train, n_clients=10,
+                                  seed=3)
+        c = partition_label_shard(ds.x_train, ds.y_train, n_clients=10,
+                                  seed=4)
+        for sa, sb in zip(a[1], b[1]):
+            np.testing.assert_array_equal(sa, sb)
+        assert any(not np.array_equal(sa, sc)
+                   for sa, sc in zip(a[1], c[1]))
+
+    def test_infeasible_configs_raise(self):
+        ds = make_synthetic_mnist(n_train=1000, n_test=100)
+        with pytest.raises(ValueError):  # 5 shards cannot cover 10 classes
+            partition_label_shard(ds.x_train, ds.y_train, n_clients=5,
+                                  classes_per_client=1)
+        with pytest.raises(ValueError):
+            partition_label_shard(ds.x_train, ds.y_train, n_clients=5,
+                                  classes_per_client=11)
 
     @settings(max_examples=10, deadline=None)
     @given(n_clients=st.sampled_from([5, 10, 20, 25]),
-           cpc=st.sampled_from([1, 2, 4]))
-    def test_property_class_restriction(self, n_clients, cpc):
+           cpc=st.sampled_from([2, 4]))
+    def test_property_class_restriction_and_conservation(self, n_clients,
+                                                         cpc):
         ds = make_synthetic_mnist(n_train=3000, n_test=100)
-        xs, ys = partition_label_shard(
+        xs, ys, stats = partition_label_shard(
             ds.x_train, ds.y_train, n_clients=n_clients,
             classes_per_client=cpc, seed=1)
         hist = label_histogram(ys, 10)
         assert ((hist > 0).sum(axis=1) <= cpc).all()
+        assert stats.dropped == 0 and stats.total == 3000
 
 
 class TestDirichlet:
     def test_nontrivial_heterogeneity(self):
         ds = make_synthetic_cifar(n_train=4000, n_test=100)
-        xs, ys = partition_dirichlet(ds.x_train, ds.y_train, n_clients=20,
-                                     beta=0.5, seed=0)
+        xs, ys, stats = partition_dirichlet(ds.x_train, ds.y_train,
+                                            n_clients=20, beta=0.5, seed=0)
         hist = label_histogram(ys, 10).astype(float)
         p = hist / hist.sum(1, keepdims=True)
         # client label distributions differ strongly from the global one
@@ -77,9 +112,69 @@ class TestDirichlet:
 
     def test_min_points_respected(self):
         ds = make_synthetic_cifar(n_train=4000, n_test=100)
-        xs, ys = partition_dirichlet(ds.x_train, ds.y_train, n_clients=10,
-                                     beta=0.5, seed=2, min_points=8)
-        assert ys.shape[1] >= 8
+        xs, ys, stats = partition_dirichlet(ds.x_train, ds.y_train,
+                                            n_clients=10, beta=0.5, seed=2,
+                                            min_points=8)
+        assert stats.sizes.min() >= 8
+
+    def test_proportions_match_beta_in_expectation(self):
+        """Dirichlet(β) component moments: E[p_i] = 1/N and
+        Var[p_i] = (1/N)(1−1/N)/(Nβ+1) — the empirical per-class client
+        proportions must match both within loose statistical bounds,
+        and a small β must be visibly more dispersed than a large one.
+        """
+        ds = make_synthetic_cifar(n_train=6000, n_test=100)
+        n = 10
+
+        def dispersion(beta, seed):
+            _, ys, stats = partition_dirichlet(
+                ds.x_train, ds.y_train, n_clients=n, beta=beta, seed=seed,
+                min_points=1)
+            hist = stats.label_histogram.astype(float)
+            p = hist / np.maximum(hist.sum(axis=0, keepdims=True), 1)
+            # mean over classes of the across-client variance of p
+            return float(p.var(axis=0).mean()), float(p.mean())
+
+        var_lo, mean_lo = dispersion(0.2, seed=0)
+        var_hi, mean_hi = dispersion(50.0, seed=0)
+        for m in (mean_lo, mean_hi):  # E[p] = 1/N regardless of β
+            assert abs(m - 1.0 / n) < 1e-6
+        theory = lambda b: (1 / n) * (1 - 1 / n) / (n * b + 1)  # noqa: E731
+        assert var_lo > var_hi * 5  # smaller β ⇒ more heterogeneity
+        # loose factor-of-3 agreement with the theoretical variance
+        assert theory(0.2) / 3 < var_lo < theory(0.2) * 3
+        assert var_hi < theory(50.0) * 3
+
+    def test_deterministic_under_seed(self):
+        ds = make_synthetic_cifar(n_train=2000, n_test=100)
+        a = partition_dirichlet(ds.x_train, ds.y_train, n_clients=8, seed=7)
+        b = partition_dirichlet(ds.x_train, ds.y_train, n_clients=8, seed=7)
+        for sa, sb in zip(a[1], b[1]):
+            np.testing.assert_array_equal(sa, sb)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n_clients=st.sampled_from([4, 8, 10, 16]),
+           beta=st.sampled_from([0.1, 0.5, 2.0]))
+    def test_property_conservation(self, n_clients, beta):
+        """Σnᵢ equals the dataset size — no partition ever drops data."""
+        ds = make_synthetic_cifar(n_train=2000, n_test=100)
+        xs, ys, stats = partition_dirichlet(
+            ds.x_train, ds.y_train, n_clients=n_clients, beta=beta,
+            seed=11, min_points=1)
+        assert stats.dropped == 0
+        assert stats.total == 2000
+        assert sum(len(y) for y in ys) == 2000
+
+
+class TestStackTrimmed:
+    def test_trim_accounting(self):
+        ds = make_synthetic_cifar(n_train=2000, n_test=100)
+        xs, ys, stats = partition_dirichlet(ds.x_train, ds.y_train,
+                                            n_clients=10, beta=0.5, seed=0)
+        sx, sy, dropped = stack_trimmed(xs, ys)
+        n_min = stats.sizes.min()
+        assert sx.shape[:2] == (10, n_min) and sy.shape == (10, n_min)
+        assert dropped == 2000 - 10 * n_min  # loss is explicit, not silent
 
 
 class TestFederatedArrays:
@@ -90,3 +185,27 @@ class TestFederatedArrays:
         assert data["x"].shape[0] == 10
         assert data["x"].shape[:2] == data["y"].shape
         assert test["x"].shape[0] == 200
+
+
+class TestFederatedPooled:
+    @pytest.mark.parametrize("scheme", ["label_shard", "dirichlet", "iid"])
+    def test_lossless_pooling(self, scheme):
+        ds = make_synthetic_mnist(n_train=2000, n_test=200)
+        data, test, spec, stats = federated_pooled(
+            ds, n_clients=10, scheme=scheme)
+        assert spec.total == 2000 and stats.dropped == 0
+        assert data["x"].shape[0] == spec.buffer_rows
+        assert data["y"].shape[0] == spec.buffer_rows
+        # CSR slices reassemble each client's shard exactly
+        x = np.asarray(data["x"])
+        for i in range(10):
+            assert spec.client_slice(i).stop - spec.client_slice(i).start \
+                == stats.sizes[i]
+        assert x[: spec.total].shape[0] == sum(stats.sizes)
+
+    def test_dirichlet_is_heterogeneous(self):
+        ds = make_synthetic_mnist(n_train=2000, n_test=200)
+        _, _, spec, stats = federated_pooled(ds, n_clients=10,
+                                             scheme="dirichlet", beta=0.3)
+        assert not spec.uniform  # ragged sizes survive the pipeline
+        assert stats.sizes.max() > stats.sizes.min()

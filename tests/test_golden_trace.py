@@ -1,9 +1,13 @@
 """Golden-trace regression: fixed-seed 30-round N=64 FedBack runs.
 
-Two traces are pinned — the compacted synchronous engine (deferral
-queue + adaptive capacity, flat layout) and the stale-tolerant engine
+Three traces are pinned — the compacted synchronous engine (deferral
+queue + adaptive capacity, flat layout), the stale-tolerant engine
 at ``max_staleness=2`` (delay pipeline + commit-time controller
-measurements on top of the same compacted round).  Each is replayed
+measurements on top of the same compacted round), and the **ragged**
+compacted engine (Dirichlet-drawn heterogeneous shard sizes pooled
+into one CSR buffer — size-bucketed masked solves through the capacity
+slots), so future PRs can't silently change ragged numerics.  Each is
+replayed
 against a checked-in record: the full event stream (bit-exact), the
 deferral/in-flight trajectories, and the final server ω (sha256 of the
 fp32 bytes plus a value-level comparison).  Any silent numerical drift
@@ -32,20 +36,40 @@ GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 GOLDEN_PATHS = {
     "sync": os.path.join(GOLDEN_DIR, "fedback_n64_r30.json"),
     "async_s2": os.path.join(GOLDEN_DIR, "fedback_async_n64_r30.json"),
+    "ragged": os.path.join(GOLDEN_DIR, "fedback_ragged_n64_r30.json"),
 }
 N, ROUNDS = 64, 30
 
 
+def _ragged_pool(data):
+    """Deterministic Dirichlet-proportional shard sizes in [4, 16]."""
+    from repro.utils.ragged import pool_data
+
+    rng = np.random.default_rng(42)
+    props = rng.dirichlet(np.full(N, 3.0))
+    n_points = data["x"].shape[1]
+    sizes = np.clip((props * N * n_points * 0.75).astype(int), 4,
+                    n_points)
+    return pool_data(
+        [np.asarray(data["x"][i])[:s] for i, s in enumerate(sizes)],
+        [np.asarray(data["y"][i])[:s] for i, s in enumerate(sizes)])
+
+
 def _run_trace(variant: str = "sync"):
-    data, params0, ls = make_least_squares(N, 8, 5)
+    data, params0, ls = make_least_squares(N, 16 if variant == "ragged"
+                                           else 8, 5)
     spec = make_flat_spec(params0)
+    ragged = None
+    if variant == "ragged":
+        data, ragged = _ragged_pool(data)
+        assert not ragged.uniform  # the masked bucket path is pinned
     cfg = FLConfig(algorithm="fedback", n_clients=N, participation=0.25,
                    rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
                    seed=0, compact=True, capacity_slack=1.25,
                    max_staleness=2 if variant == "async_s2" else None,
                    controller=ControllerConfig(K=0.5, alpha=0.9))
     state = init_state(cfg, params0, spec=spec)
-    round_fn = make_round_fn(cfg, ls, data, spec=spec)
+    round_fn = make_round_fn(cfg, ls, data, spec=spec, ragged=ragged)
     state, hist = run_rounds(round_fn, state, ROUNDS)
     events = np.asarray(hist.events).astype(np.uint8)
     omega = np.asarray(state.omega, np.float32).reshape(-1)
@@ -81,7 +105,7 @@ def _record(events, omega, deferred, inflight) -> dict:
 
 
 class TestGoldenTrace:
-    @pytest.mark.parametrize("variant", ["sync", "async_s2"])
+    @pytest.mark.parametrize("variant", ["sync", "async_s2", "ragged"])
     def test_fixed_seed_run_matches_golden(self, request, variant):
         golden_path = GOLDEN_PATHS[variant]
         events, omega, deferred, inflight = _run_trace(variant)

