@@ -58,7 +58,7 @@ def main():
         seeds=(0, 1, 2, 3), gains=(0.25, 1.0))
     rates = np.asarray(jnp.mean(hist.events.astype(jnp.float32), axis=(0, 2)))
     print("\nseed  K     realized participation (target 0.3)")
-    for (seed, k, _), rate in zip(grid_runs, rates):
+    for (seed, k, _), rate in zip(grid_runs, rates, strict=True):
         print(f"{seed:4d}  {k:4.2f}  {rate:.3f}")
 
 

@@ -1,0 +1,25 @@
+"""tracecheck — static-invariant analysis of the compiled round engine.
+
+The FedBack efficiency story (one fused ADMM pass, donated (N, D)
+state, a single consensus all-reduce, no host transfers, one trace per
+run) is only real if the *compiled* program keeps those properties.
+This package states them as data and checks them against every engine
+configuration:
+
+- ``artifacts``  — builds (jaxpr, compiled HLO) artifacts for each
+  configuration in the {dense, compact} × {flat, tree} × {sync, async}
+  × {uniform, ragged} × {1, 2}-device matrix;
+- ``rules``      — the declarative rule engine (op-count budgets,
+  donation audits, collective budgets, host-transfer bans);
+- ``retrace``    — the retrace sentry and the ``jax.transfer_guard``
+  execution harness;
+- ``astlint``    — a repo-specific AST lint over the traced scopes of
+  ``src/repro/{core,kernels,utils}``;
+- ``cli``        — ``python -m repro.analysis --matrix fast|full``
+  (console script ``tracecheck``) with a committed baseline gate.
+
+This module stays import-light (no jax): the CLI must be able to set
+``XLA_FLAGS`` for the 2-device configurations before jax loads.
+"""
+
+__all__ = ["artifacts", "astlint", "cli", "retrace", "rules"]

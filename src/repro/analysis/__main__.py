@@ -1,0 +1,11 @@
+"""``python -m repro.analysis`` → the tracecheck CLI.
+
+Importing ``repro.analysis.cli`` sets ``XLA_FLAGS`` for the 2-device
+matrix legs before jax loads (the package ``__init__`` is
+deliberately jax-free so this ordering holds).
+"""
+import sys
+
+from repro.analysis.cli import main
+
+sys.exit(main())

@@ -1,0 +1,208 @@
+"""Engine artifacts: one traced/compiled round per configuration.
+
+An :class:`EngineArtifact` bundles everything the rule engine looks
+at — the round's jaxpr, the compiled (post-SPMD) HLO text, the state
+it was traced with and the static problem facts (N, D, capacity,
+world size).  :func:`build_artifact` is the single entry point; the
+matrices (``FAST_MATRIX``/``FULL_MATRIX``) enumerate the supported
+engine configurations.
+
+The toy problem is deliberately small but *not* degenerate: N and D
+are large enough that a full-width (N, D) buffer is clearly bigger
+than every legitimate control collective, so byte budgets separate
+signal from noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.compact import capacity_bounds
+from repro.core.fedback import FLConfig, init_state, make_round_fn
+from repro.data.synthetic import make_least_squares
+from repro.utils.flatstate import make_flat_spec
+from repro.utils.hlo import cost_analysis_dict
+from repro.utils.ragged import pool_data
+
+#: Default toy-problem dimensions (see module docstring).
+DEFAULT_N = 32
+DEFAULT_POINTS = 8
+DEFAULT_DIM = 16
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ConfigKey:
+    """One point of the engine-configuration matrix."""
+
+    path: str     # "dense" | "compact"
+    layout: str   # "flat" | "tree"
+    timing: str   # "sync" | "async"
+    shards: str   # "uniform" | "ragged"
+    devices: int = 1
+
+    @property
+    def name(self) -> str:
+        return (f"{self.path}-{self.layout}-{self.timing}-"
+                f"{self.shards}-{self.devices}d")
+
+    @property
+    def kernels_on(self) -> bool:
+        """Policy: flat-layout rounds run the fused Pallas kernels."""
+        return self.layout == "flat"
+
+
+def _matrix(devices=(1, 2)) -> tuple:
+    return tuple(
+        ConfigKey(path, layout, timing, shards, dev)
+        for path, layout, timing, shards, dev in itertools.product(
+            ("dense", "compact"), ("flat", "tree"), ("sync", "async"),
+            ("uniform", "ragged"), devices))
+
+
+#: All 32 supported configurations (nightly).
+FULL_MATRIX = _matrix()
+
+#: PR-gate subset: the canonical fused round, the compacted round, the
+#: kitchen sink (compact+async+ragged), the tree layout (pallas-free
+#: budget), and the two-device legs that exercise collectives/donation
+#: under the mesh.
+FAST_MATRIX = (
+    ConfigKey("dense", "flat", "sync", "uniform", 1),
+    ConfigKey("compact", "flat", "sync", "uniform", 1),
+    ConfigKey("compact", "flat", "async", "ragged", 1),
+    ConfigKey("dense", "tree", "sync", "uniform", 1),
+    ConfigKey("dense", "flat", "sync", "uniform", 2),
+    ConfigKey("compact", "flat", "async", "ragged", 2),
+)
+
+MATRICES = {"fast": FAST_MATRIX, "full": FULL_MATRIX}
+
+
+@dataclasses.dataclass
+class EngineArtifact:
+    """Everything the rule engine inspects for one configuration."""
+
+    key: ConfigKey
+    cfg: FLConfig
+    n: int
+    dim: int
+    capacity: int | None        # solver-row budget (compact path)
+    c_min: int | None
+    world_size: int
+    donated: bool
+    jaxpr: Any                  # ClosedJaxpr of the un-jitted round
+    compiled_text: str | None   # post-SPMD HLO, None if compile=False
+    cost: dict                  # normalized Compiled.cost_analysis()
+    state: Any                  # FLState the round was traced with
+    round_fn: Callable | None   # the jitted round (None if compile=False)
+    spec: Any
+    ragged: Any
+    mesh: Any
+
+    @property
+    def kernels_on(self) -> bool:
+        return self.key.kernels_on
+
+
+def ragged_sizes(n: int, n_points: int) -> list:
+    """Deterministic non-uniform client shard sizes (3-way cycle)."""
+    return [max(n_points - 2 * (i % 3), 2) for i in range(n)]
+
+
+def build_problem(key: ConfigKey, *, n: int = DEFAULT_N,
+                  n_points: int = DEFAULT_POINTS, dim: int = DEFAULT_DIM,
+                  seed: int = 0):
+    """(data, params0, loss_fn, spec, ragged) for one configuration."""
+    data, params0, loss_fn = make_least_squares(
+        n, n_points=n_points, dim=dim, seed=seed)
+    ragged = None
+    if key.shards == "ragged":
+        sizes = ragged_sizes(n, n_points)
+        data, ragged = pool_data(
+            [np.asarray(data["x"][i])[:s] for i, s in enumerate(sizes)],
+            [np.asarray(data["y"][i])[:s] for i, s in enumerate(sizes)])
+    spec = make_flat_spec(params0) if key.layout == "flat" else None
+    return data, params0, loss_fn, spec, ragged
+
+
+def build_config(key: ConfigKey, *, n: int = DEFAULT_N,
+                 overrides: dict | None = None) -> FLConfig:
+    """The FLConfig a configuration key stands for."""
+    kw: dict = dict(
+        n_clients=n,
+        participation=0.25,
+        rho=1.0,
+        lr=0.1,
+        momentum=0.0,
+        epochs=1,
+        batch_size=4,
+        compact=key.path == "compact",
+        max_staleness=2 if key.timing == "async" else None,
+        use_admm_kernel=key.kernels_on,
+        use_trigger_kernel=key.kernels_on,
+    )
+    kw.update(overrides or {})
+    return FLConfig(**kw)
+
+
+def _client_mesh(world_size: int):
+    from repro.sharding.clients import make_client_mesh
+    return make_client_mesh(world_size)
+
+
+def build_artifact(key: ConfigKey, *, n: int = DEFAULT_N,
+                   n_points: int = DEFAULT_POINTS, dim: int = DEFAULT_DIM,
+                   seed: int = 0, compile: bool = True,
+                   donate: bool = True, body_transform=None,
+                   cfg_overrides: dict | None = None) -> EngineArtifact:
+    """Trace (and optionally compile) one engine configuration.
+
+    ``body_transform`` threads through to ``make_round_fn`` — the
+    mutation hook the self-tests use.  ``compile=False`` skips the
+    XLA compile and yields a jaxpr-only artifact (cheap: the jaxpr
+    rules still apply).
+    """
+    if key.devices > 1 and jax.device_count() < key.devices:
+        raise RuntimeError(
+            f"{key.name} needs {key.devices} devices, have "
+            f"{jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={key.devices} "
+            f"before importing jax)")
+    data, params0, loss_fn, spec, ragged = build_problem(
+        key, n=n, n_points=n_points, dim=dim, seed=seed)
+    cfg = build_config(key, n=n, overrides=cfg_overrides)
+    mesh = _client_mesh(key.devices) if key.devices > 1 else None
+    state = init_state(cfg, params0, mesh=mesh, spec=spec)
+
+    common: dict = dict(mesh=mesh, spec=spec, ragged=ragged,
+                        body_transform=body_transform)
+    traced = make_round_fn(cfg, loss_fn, data, jit=False, **common)
+    jaxpr = jax.make_jaxpr(traced)(state)
+
+    compiled_text = None
+    cost: dict = {}
+    round_fn = None
+    if compile:
+        round_fn = make_round_fn(cfg, loss_fn, data, jit=True,
+                                 donate=donate, **common)
+        compiled = round_fn.lower(state).compile()
+        compiled_text = compiled.as_text()
+        cost = cost_analysis_dict(compiled.cost_analysis())
+
+    capacity = c_min = None
+    if cfg.compact:
+        c_min, capacity = capacity_bounds(
+            n, cfg.participation, cfg.capacity_slack, cfg.capacity,
+            n_shards=key.devices)
+    dim_total = spec.dim if spec is not None else sum(
+        int(np.prod(x.shape)) for x in jax.tree.leaves(params0))
+    return EngineArtifact(
+        key=key, cfg=cfg, n=n, dim=dim_total, capacity=capacity,
+        c_min=c_min, world_size=key.devices, donated=donate,
+        jaxpr=jaxpr, compiled_text=compiled_text, cost=cost,
+        state=state, round_fn=round_fn, spec=spec, ragged=ragged,
+        mesh=mesh)

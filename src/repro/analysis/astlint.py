@@ -1,0 +1,200 @@
+"""Repo-specific AST lint: traced-scope footguns in core|kernels|utils.
+
+Generic linters can't know which functions end up inside ``jax.jit``.
+``TRACED_SCOPES`` records exactly that — per module, the functions
+whose bodies execute under tracing (``"*"`` = every function in the
+file).  Nested functions and lambdas inherit the traced property from
+their enclosing scope.
+
+Checks (all are silent performance or correctness bugs under jit):
+
+- ``TC101`` ``np.*``/``numpy.*`` call — traces to a host constant at
+  best, a ``TracerArrayConversionError`` at worst;
+- ``TC102`` ``.item()`` — forces a device→host sync per call;
+- ``TC103`` ``float(...)``/``int(...)``/``bool(...)`` applied directly
+  to a ``jnp``/``jax`` expression — same sync, or a trace error;
+- ``TC104`` ``if``/``while`` whose test contains a ``jnp``/``jax``
+  call — python branching on a traced value.
+
+A line ending in ``# tracecheck: ok`` (with an optional reason) is
+exempt — the opt-out for deliberate trace-time constant computation
+on *static* values (e.g. ``np.prod`` over a static shape tuple).
+
+This module is import-light (stdlib only): the lint runs before jax
+is ever imported, including under the CLI's env setup.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+PRAGMA_RE = re.compile(r"#\s*tracecheck:\s*ok\b")
+
+#: Module (relative to ``src/repro``) → traced function names, or
+#: ``"*"`` for every function in the file.  Files not listed are not
+#: linted — add the entry when a new module grows jitted bodies.
+TRACED_SCOPES: dict = {
+    "core/engine.py": "*",
+    "core/trigger.py": "*",
+    "core/controller.py": "*",
+    "core/selection.py": "*",
+    "core/fedback.py": (
+        "_local_solve", "_masked_local_solve", "_epoch_indices",
+        "_trigger", "_duals_and_centers", "dense_client_update",
+        "ragged_dense_update", "compact_client_update", "round_body",
+        "solver", "masked_solver", "eval_fn"),
+    "core/compact.py": (
+        "adaptive_limit", "compact_plan", "queue_update", "gather_rows",
+        "scatter_rows", "solve_slots", "slice_rows", "block"),
+    "kernels/admm_update.py": (
+        "_kernel3", "_kernel2", "admm_update", "admm_update_sharded"),
+    "kernels/trigger_norms.py": (
+        "_kernel", "trigger_sq_norms", "trigger_sq_norms_sharded"),
+    "kernels/flash_attention.py": ("_kernel",),
+    "kernels/ssd_scan.py": ("_kernel",),
+    "kernels/ops.py": (
+        "trigger_sq_norms", "admm_update", "trigger_sq_norms_pytree"),
+    "utils/pytree.py": "*",
+    "utils/flatstate.py": (
+        "flatten", "unflatten", "zeros_stacked", "flatten_stacked",
+        "unflatten_stacked", "flat_loss"),
+}
+
+_NUMPY_ROOTS = ("np", "numpy")
+_TRACED_ROOTS = ("jnp", "jax", "lax", "pl", "plgpu", "pltpu")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _call_root(node: ast.AST) -> str | None:
+    """Leftmost name of a call's function expression, if any."""
+    f = node.func if isinstance(node, ast.Call) else node
+    while isinstance(f, ast.Attribute):
+        f = f.value
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _contains_traced_call(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and _call_root(sub) in _TRACED_ROOTS:
+            return True
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str, source: str, traced):
+        self.relpath = relpath
+        self.lines = source.splitlines()
+        self.traced = traced  # "*" or set of function names
+        self.depth = 0        # > 0 ⇔ inside a traced scope
+        self.findings: list = []
+
+    def _is_traced_def(self, name: str) -> bool:
+        return self.traced == "*" or name in self.traced
+
+    def _exempt(self, node) -> bool:
+        line = self.lines[node.lineno - 1] if node.lineno <= len(
+            self.lines) else ""
+        return bool(PRAGMA_RE.search(line))
+
+    def _add(self, node, code: str, message: str):
+        if not self._exempt(node):
+            self.findings.append(LintFinding(
+                path=self.relpath, line=node.lineno, code=code,
+                message=message))
+
+    # --- scope tracking -------------------------------------------
+    def _visit_func(self, node, name: str):
+        enter = self.depth > 0 or self._is_traced_def(name)
+        self.depth += 1 if enter else 0
+        self.generic_visit(node)
+        self.depth -= 1 if enter else 0
+
+    def visit_FunctionDef(self, node):
+        self._visit_func(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        if self.depth:
+            self._visit_func(node, "<lambda>")
+        else:
+            self.generic_visit(node)
+
+    # --- checks ----------------------------------------------------
+    def visit_Call(self, node):
+        if self.depth > 0:
+            root = _call_root(node)
+            if root in _NUMPY_ROOTS:
+                self._add(node, "TC101",
+                          "numpy call inside a traced scope (host "
+                          "constant or trace error)")
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                self._add(node, "TC102",
+                          ".item() inside a traced scope forces a "
+                          "device sync")
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and node.args
+                    and isinstance(node.args[0], ast.Call)
+                    and _call_root(node.args[0]) in _TRACED_ROOTS):
+                self._add(node, "TC103",
+                          f"{node.func.id}() coercion of a traced "
+                          f"expression (device sync / trace error)")
+        self.generic_visit(node)
+
+    def _check_branch(self, node):
+        if self.depth > 0 and _contains_traced_call(node.test):
+            self._add(node, "TC104",
+                      "python branch on a traced value (use jnp.where "
+                      "or lax.cond)")
+        self.generic_visit(node)
+
+    visit_If = _check_branch
+    visit_While = _check_branch
+
+
+def lint_source(source: str, relpath: str, scopes=None) -> list:
+    """Lint one module's source; ``relpath`` keys into the registry."""
+    scopes = TRACED_SCOPES if scopes is None else scopes
+    traced = scopes.get(relpath)
+    if traced is None:
+        return []
+    if traced != "*":
+        traced = set(traced)
+    linter = _Linter(relpath, source, traced)
+    linter.visit(ast.parse(source))
+    return sorted(linter.findings, key=lambda f: (f.path, f.line))
+
+
+def lint_repo(src_root=None, scopes=None) -> list:
+    """All findings over the registered traced scopes."""
+    if src_root is None:
+        src_root = pathlib.Path(__file__).resolve().parents[1]
+    src_root = pathlib.Path(src_root)
+    scopes = TRACED_SCOPES if scopes is None else scopes
+    findings: list = []
+    for relpath in sorted(scopes):
+        path = src_root / relpath
+        if not path.exists():
+            findings.append(LintFinding(
+                path=relpath, line=0, code="TC100",
+                message="registered module missing on disk"))
+            continue
+        findings.extend(lint_source(path.read_text(), relpath,
+                                    scopes=scopes))
+    return findings

@@ -1,0 +1,214 @@
+"""tracecheck CLI: compile the matrix, evaluate rules, gate on a
+baseline.
+
+``python -m repro.analysis --matrix fast|full [--json report.json]
+[--baseline benchmarks/baselines/ANALYSIS.json]`` — also installed as
+the ``tracecheck`` console script.
+
+The report is machine-readable and deterministic (no wall-clock
+numbers), so the committed baseline compare is exact: a rule that
+regresses from pass to fail, a changed Pallas-call count or an
+all-reduce byte growth over the drift allowance fails the gate —
+mirror of ``benchmarks/compare.py`` for structural facts instead of
+timings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _ensure_host_devices(n: int = 2) -> None:
+    """Force ≥ n host CPU devices — must run before jax is imported
+    (the 2-device matrix legs need a real mesh even on CPU)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}").strip()
+
+
+_ensure_host_devices()
+
+from repro.analysis import astlint  # noqa: E402
+from repro.analysis.artifacts import MATRICES, build_artifact  # noqa: E402
+from repro.analysis.retrace import (  # noqa: E402
+    run_single_trace_check,
+    run_transfer_guard_check,
+)
+from repro.analysis.rules import evaluate  # noqa: E402
+
+#: All-reduce byte drift tolerated against the baseline before the
+#: gate trips (absolute bytes/round, covers benign scalar-metric churn).
+ALLREDUCE_DRIFT_BYTES = 64.0
+
+
+def _env_fingerprint() -> str:
+    import platform
+
+    import jax
+    return (f"jax={jax.__version__};backend={jax.default_backend()};"
+            f"machine={platform.machine()}")
+
+
+def run_matrix(matrix_name: str, *, execute: bool = True,
+               lint: bool = True, log=print) -> dict:
+    """Evaluate every rule over the configuration matrix → report."""
+    import jax
+
+    report: dict = {
+        "_env": _env_fingerprint(),
+        "_matrix": matrix_name,
+        "lint": None,
+        "exec": {},
+        "configs": {},
+    }
+    if lint:
+        findings = astlint.lint_repo()
+        report["lint"] = {
+            "status": "fail" if findings else "pass",
+            "findings": [f.to_json() for f in findings],
+        }
+        log(f"astlint: {report['lint']['status']} "
+            f"({len(findings)} findings)")
+    for key in MATRICES[matrix_name]:
+        if key.devices > jax.device_count():
+            report["configs"][key.name] = {
+                "_status": "skip",
+                "_reason": f"needs {key.devices} devices"}
+            log(f"{key.name}: SKIP (needs {key.devices} devices)")
+            continue
+        art = build_artifact(key)
+        results = evaluate(art)
+        report["configs"][key.name] = {
+            r.rule: r.to_json() for r in results}
+        bad = [r for r in results if r.status == "fail"]
+        log(f"{key.name}: {'FAIL' if bad else 'ok'} "
+            f"({sum(r.status == 'pass' for r in results)} pass, "
+            f"{sum(r.status == 'skip' for r in results)} skip)")
+        for r in bad:
+            for v in r.violations:
+                log(f"  {r.rule}: {v}")
+    if execute:
+        for check in (run_single_trace_check, run_transfer_guard_check):
+            res = check()
+            report["exec"][res.rule] = res.to_json()
+            log(f"exec {res.rule}: {res.status}")
+    return report
+
+
+def report_failures(report: dict) -> list:
+    """Flat list of every failing rule/lint/exec entry in a report."""
+    failures = []
+    lint = report.get("lint")
+    if lint and lint["status"] == "fail":
+        failures.append(f"astlint: {len(lint['findings'])} findings")
+    for name, res in report.get("exec", {}).items():
+        if res["status"] == "fail":
+            failures.append(f"exec/{name}: {res['violations']}")
+    for cfg, rules in report.get("configs", {}).items():
+        for rule, res in rules.items():
+            if rule.startswith("_"):
+                continue
+            if res["status"] == "fail":
+                failures.append(f"{cfg}/{rule}: {res['violations']}")
+    return failures
+
+
+def compare_to_baseline(base: dict, fresh: dict) -> list:
+    """Regressions of ``fresh`` against a committed baseline report.
+
+    Gates on structure, not timings: status regressions (pass →
+    fail/missing), Pallas-call count changes, and all-reduce byte
+    growth beyond the drift allowance.  New configurations and rules
+    are allowed (they gate from the next baseline update on).
+    """
+    regressions = []
+    if base.get("_env") != fresh.get("_env"):
+        # Structural facts should survive an env bump, so keep
+        # comparing — but record the mismatch for the log.
+        regressions_note = (f"env drift: baseline {base.get('_env')} "
+                            f"vs {fresh.get('_env')}")
+    else:
+        regressions_note = None
+    for cfg, base_rules in base.get("configs", {}).items():
+        if base_rules.get("_status") == "skip":
+            continue  # the baseline run never evaluated it
+        fresh_rules = fresh.get("configs", {}).get(cfg)
+        if fresh_rules is None:
+            regressions.append(f"{cfg}: configuration vanished from "
+                               f"the matrix")
+            continue
+        for rule, bres in base_rules.items():
+            if rule.startswith("_"):
+                continue
+            fres = fresh_rules.get(rule)
+            if fres is None:
+                regressions.append(f"{cfg}/{rule}: rule vanished")
+                continue
+            if bres["status"] == "pass" and fres["status"] != "pass":
+                regressions.append(
+                    f"{cfg}/{rule}: pass → {fres['status']} "
+                    f"{fres.get('violations')}")
+                continue
+            bm, fm = bres.get("metrics", {}), fres.get("metrics", {})
+            if ("pallas_call" in bm
+                    and fm.get("pallas_call") != bm["pallas_call"]):
+                regressions.append(
+                    f"{cfg}/{rule}: pallas_call "
+                    f"{bm['pallas_call']} → {fm.get('pallas_call')}")
+            bar = bm.get("all-reduce", {}).get("bytes")
+            far = fm.get("all-reduce", {}).get("bytes")
+            if (bar is not None and far is not None
+                    and far > bar + ALLREDUCE_DRIFT_BYTES):
+                regressions.append(
+                    f"{cfg}/{rule}: all-reduce bytes {bar} → {far} "
+                    f"(+{ALLREDUCE_DRIFT_BYTES:.0f} allowed)")
+    if regressions and regressions_note:
+        regressions.append(regressions_note)
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tracecheck",
+        description="Static-invariant analysis of the compiled round "
+                    "engine (see docs/analysis.md)")
+    ap.add_argument("--matrix", choices=sorted(MATRICES),
+                    default="fast")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="committed baseline report to gate against")
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip the retrace/transfer-guard runs")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint")
+    args = ap.parse_args(argv)
+
+    report = run_matrix(args.matrix, execute=not args.no_exec,
+                        lint=not args.no_lint)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+
+    failures = report_failures(report)
+    for f in failures:
+        print(f"FAIL {f}")
+    if args.baseline:
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        regressions = compare_to_baseline(base, report)
+        for r in regressions:
+            print(f"REGRESSION {r}")
+        failures.extend(regressions)
+    print("tracecheck:", "FAIL" if failures else "ok",
+          f"({len(report['configs'])} configurations)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""Dynamic invariants: one trace per run, no host transfers at run
+time.
+
+The static rules see one trace by construction; these harnesses run
+the engine and check the properties that only show up under
+execution:
+
+- :class:`TraceSentry` counts how many times the round *body* is
+  traced.  PR 5's one-compile grid property says controller-gain
+  overrides (``ctrl_arg``) vary as runtime values, so stepping the
+  round across rounds **and** across override values must trace
+  exactly once.
+- :func:`run_transfer_guard_check` replays rounds under
+  ``jax.transfer_guard("disallow")`` — any implicit host↔device
+  transfer in the steady state raises.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.artifacts import ConfigKey, build_problem, build_config
+from repro.analysis.rules import RuleResult, _result
+from repro.core.fedback import init_state, make_round_fn
+
+
+class TraceSentry:
+    """Counts traces of the round body via the ``body_transform`` hook.
+
+    ``make_round_fn(..., body_transform=sentry.transform)`` wraps the
+    round function; the wrapper body executes once per trace (jit
+    caches thereafter), so ``sentry.traces`` is the trace count.
+    """
+
+    def __init__(self):
+        self.traces = 0
+
+    def transform(self, body):
+        def counted(*args):
+            self.traces += 1
+            return body(*args)
+        return counted
+
+
+def run_single_trace_check(key: ConfigKey | None = None, *, n: int = 16,
+                           n_points: int = 8, dim: int = 8,
+                           rounds: int = 3,
+                           rates: tuple = (0.3, 0.7, 0.5),
+                           shape_mutation: bool = False) -> RuleResult:
+    """Step ``rounds × len(rates)`` rounds varying the controller-gain
+    overrides; the round must trace exactly once.
+
+    ``shape_mutation=True`` is the seeded violation for the
+    self-tests: it feeds per-client (N,) target rates on alternating
+    calls, changing the override avals and forcing a retrace.
+    """
+    key = key or ConfigKey("dense", "flat", "sync", "uniform", 1)
+    data, params0, loss_fn, spec, ragged = build_problem(
+        key, n=n, n_points=n_points, dim=dim)
+    cfg = build_config(key, n=n)
+    sentry = TraceSentry()
+    round_fn = make_round_fn(cfg, loss_fn, data, jit=True, donate=False,
+                             ctrl_arg=True, spec=spec, ragged=ragged,
+                             body_transform=sentry.transform)
+    state = init_state(cfg, params0, spec=spec)
+    calls = 0
+    for i, rate in enumerate(rates):
+        if shape_mutation and i % 2:
+            tgt = jnp.full((n,), rate, jnp.float32)  # (N,): new aval
+        else:
+            tgt = jnp.float32(rate)
+        overrides = {"K": jnp.float32(0.2), "target_rate": tgt}
+        for _ in range(rounds):
+            state, _metrics = round_fn(state, overrides)
+            calls += 1
+    jax.block_until_ready(state)
+    violations = [] if sentry.traces == 1 else [
+        f"{key.name}: {sentry.traces} traces over {calls} rounds "
+        f"(override values and state must not retrace)"]
+    return _result("single-trace", violations,
+                   {"traces": sentry.traces, "rounds": calls})
+
+
+def run_transfer_guard_check(key: ConfigKey | None = None, *,
+                             n: int = 16, n_points: int = 8,
+                             dim: int = 8,
+                             rounds: int = 3) -> RuleResult:
+    """Steady-state rounds under ``jax.transfer_guard("disallow")``.
+
+    The first call (compile + constant staging) runs outside the
+    guard; every subsequent round must touch the host zero times.
+    """
+    key = key or ConfigKey("dense", "flat", "sync", "uniform", 1)
+    data, params0, loss_fn, spec, ragged = build_problem(
+        key, n=n, n_points=n_points, dim=dim)
+    cfg = build_config(key, n=n)
+    round_fn = make_round_fn(cfg, loss_fn, data, jit=True, donate=False,
+                             spec=spec, ragged=ragged)
+    state = init_state(cfg, params0, spec=spec)
+    state, _ = round_fn(state)  # warm-up: compile outside the guard
+    jax.block_until_ready(state)
+    violations = []
+    try:
+        with jax.transfer_guard("disallow"):
+            for _ in range(rounds):
+                state, _metrics = round_fn(state)
+            jax.block_until_ready(state)
+    except Exception as e:  # noqa: BLE001 — the guard raises RuntimeError
+        violations.append(f"{key.name}: transfer under guard: {e}")
+    return _result("transfer-guard", violations, {"rounds": rounds})

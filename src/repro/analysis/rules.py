@@ -1,0 +1,325 @@
+"""The tracecheck rule engine: each invariant is data, not prose.
+
+A rule is a frozen dataclass whose fields *are* the budget (expected
+op counts, byte allowances, banned primitive lists).  ``check`` maps
+an :class:`~repro.analysis.artifacts.EngineArtifact` to a
+:class:`RuleResult`; ``applies`` gates rules that only make sense for
+some configurations (e.g. collective budgets need ≥ 2 devices).
+
+The default ``RULES`` tuple encodes the engine's performance
+contract:
+
+- ``fused-admm-pass``     exactly two Pallas calls per flat round
+                          (fused λ⁺/center update + trigger norms),
+                          zero on the tree layout;
+- ``no-full-width-sweeps`` at most one surviving top-level (N, D)
+                          elementwise sweep on the dense flat round
+                          (the z assembly), zero on the compacted one;
+- ``no-f64-ops``          no float64/complex128 anywhere (jaxpr or
+                          compiled module);
+- ``donated-state-aliases`` every θ/λ/z_prev/DeferQueue/InFlight/ω
+                          buffer aliases an input in the compiled
+                          module's ``input_output_alias`` map;
+- ``collective-budget``   per-round all-reduce link bytes within the
+                          consensus + RNG + scalar allowance, and no
+                          all-gather bigger than a control vector
+                          (the replicated pool must never be gathered);
+- ``no-host-transfers``   no ``device_put``/callback primitives in the
+                          round jaxpr, no infeed/outfeed/send/recv or
+                          python-callback custom-calls in the HLO.
+
+Adding a rule = adding a dataclass here and appending an instance to
+``RULES`` (see docs/analysis.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any
+
+import jax
+
+from repro.core.state import CLIENT_STACKED_FIELDS
+from repro.utils import hlo as H
+
+
+@dataclasses.dataclass
+class RuleResult:
+    rule: str
+    status: str                # "pass" | "fail" | "skip"
+    violations: list
+    metrics: dict
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _result(name: str, violations: list, metrics: dict) -> RuleResult:
+    return RuleResult(rule=name, status="fail" if violations else "pass",
+                      violations=violations, metrics=metrics)
+
+
+def _skip(name: str, why: str) -> RuleResult:
+    return RuleResult(rule=name, status="skip", violations=[],
+                      metrics={"skipped": why})
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPassBudget:
+    """Pallas-call count: the flat round is exactly two fused passes."""
+
+    name: str = "fused-admm-pass"
+    expected_flat: int = 2   # admm_update + trigger_sq_norms
+    expected_tree: int = 0
+
+    def applies(self, art) -> bool:
+        return True
+
+    def check(self, art) -> RuleResult:
+        counts = H.jaxpr_eqn_counts(art.jaxpr)
+        got = counts.get("pallas_call", 0)
+        want = (self.expected_flat if art.kernels_on
+                else self.expected_tree)
+        violations = [] if got == want else [
+            f"{art.key.name}: {got} pallas_call eqns, expected {want}"]
+        return _result(self.name, violations, {"pallas_call": got,
+                                               "expected": want})
+
+
+@dataclasses.dataclass(frozen=True)
+class FullWidthSweepBudget:
+    """Surviving top-level (N, D) elementwise sweeps outside kernels.
+
+    The dense flat round keeps exactly one (the z = θ + λ assembly);
+    the compacted round runs its algebra at capacity width C < N and
+    must keep zero.  Only meaningful where the full (N, D) shape is
+    visible at the jaxpr top level: flat layout, single device.
+    """
+
+    name: str = "no-full-width-sweeps"
+    dense_budget: int = 1
+    compact_budget: int = 0
+    prims: tuple = ("add", "sub", "mul")
+
+    def applies(self, art) -> bool:
+        return art.kernels_on and art.world_size == 1
+
+    def check(self, art) -> RuleResult:
+        if not self.applies(art):
+            return _skip(self.name, "flat single-device only")
+        shapes = H.toplevel_elementwise_shapes(art.jaxpr,
+                                               prims=self.prims)
+        full = [s for s in shapes if tuple(s) == (art.n, art.dim)]
+        budget = (self.compact_budget if art.cfg.compact
+                  else self.dense_budget)
+        violations = [] if len(full) <= budget else [
+            f"{art.key.name}: {len(full)} top-level (N={art.n}, "
+            f"D={art.dim}) elementwise sweeps, budget {budget}"]
+        return _result(self.name, violations,
+                       {"full_width_sweeps": len(full),
+                        "budget": budget})
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypeBan:
+    """No f64/c128 anywhere — the engine is fp32 end to end."""
+
+    name: str = "no-f64-ops"
+    banned_jaxpr: tuple = ("float64", "complex128")
+    banned_hlo: tuple = ("f64", "c128")
+
+    def applies(self, art) -> bool:
+        return True
+
+    def check(self, art) -> RuleResult:
+        violations = []
+        seen = H.jaxpr_dtypes(art.jaxpr)
+        for dt in self.banned_jaxpr:
+            if dt in seen:
+                violations.append(
+                    f"{art.key.name}: {dt} values in the round jaxpr")
+        hlo_refs = 0
+        if art.compiled_text is not None:
+            for dt in self.banned_hlo:
+                refs = H.count_dtype_refs(art.compiled_text, dt)
+                hlo_refs += refs
+                if refs:
+                    violations.append(
+                        f"{art.key.name}: {refs} {dt} shapes in the "
+                        f"compiled module")
+        return _result(self.name, violations,
+                       {"jaxpr_dtypes": sorted(seen),
+                        "banned_hlo_refs": hlo_refs})
+
+
+def required_alias_avals(art) -> Counter:
+    """(hlo_dtype, per-device shape) multiset of state buffers that
+    must be donated: θ/λ/z_prev/DeferQueue/InFlight plus ω.
+
+    Client-stacked leading axes are divided by the world size — the
+    compiled module's parameter shapes are per-device post-SPMD.
+    """
+    required: Counter = Counter()
+    fields = set(CLIENT_STACKED_FIELDS) | {"omega"}
+    for fname in fields:
+        val = getattr(art.state, fname, None)
+        if val is None:
+            continue
+        stacked = fname in CLIENT_STACKED_FIELDS
+        for leaf in jax.tree.leaves(val):
+            shape = tuple(int(d) for d in leaf.shape)
+            if (stacked and art.world_size > 1 and shape
+                    and shape[0] % art.world_size == 0):
+                shape = ((shape[0] // art.world_size,) + shape[1:])
+            dt = H.NUMPY_TO_HLO_DTYPE.get(str(leaf.dtype), str(leaf.dtype))
+            required[(dt, shape)] += 1
+    return required
+
+
+@dataclasses.dataclass(frozen=True)
+class DonationAudit:
+    """Every live state buffer must alias an input in the compiled
+    module — a dropped donation doubles the (N, D) working set."""
+
+    name: str = "donated-state-aliases"
+
+    def applies(self, art) -> bool:
+        return art.compiled_text is not None
+
+    def check(self, art) -> RuleResult:
+        if not self.applies(art):
+            return _skip(self.name, "no compiled module")
+        text = art.compiled_text
+        aliases = H.parse_input_output_aliases(text)
+        params = dict(enumerate(H.entry_parameters(text)))
+        aliased: Counter = Counter()
+        for a in aliases:
+            p = params.get(a["param_number"])
+            if p is not None and not a["param_index"]:
+                aliased[(p[1], p[2])] += 1
+        required = required_alias_avals(art)
+        violations = []
+        for aval, need in sorted(required.items(), key=str):
+            have = aliased.get(aval, 0)
+            if have < need:
+                dt, shape = aval
+                violations.append(
+                    f"{art.key.name}: {need - have} un-donated "
+                    f"{dt}{list(shape)} state buffer(s) "
+                    f"(need {need} aliased, found {have})")
+        return _result(self.name, violations,
+                       {"aliased_params": len(aliases),
+                        "required_buffers": sum(required.values())})
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """Per-round collective bytes against the roofline consensus term.
+
+    The round's one genuine collective is the consensus mean — a (D,)
+    all-reduce — plus the PRNG-key fold and a handful of scalar
+    metric reductions.  Ring model: 2 · bytes · (n−1)/n per
+    all-reduce.  All-gathers are capped at a control-vector size: the
+    replicated pool and the (N, D) state must never be gathered.
+    """
+
+    name: str = "collective-budget"
+    scalar_allowance_bytes: float = 256.0
+    allgather_max_bytes: float = 512.0
+    safety: float = 1.5
+
+    def applies(self, art) -> bool:
+        return art.world_size > 1 and art.compiled_text is not None
+
+    def budget_bytes(self, art) -> float:
+        ws = art.world_size
+        frac = (ws - 1) / ws
+        consensus = 2.0 * frac * art.dim * 4        # (D,) f32 mean
+        rng = 2.0 * frac * (2 * art.n * 4)          # u32 key fold
+        # The dense ragged round gathers each bucket's (θ, center)
+        # rows before its vmapped solve; members interleave across the
+        # sharded client axis, so SPMD lowers the constant-index
+        # gathers to masked-local + all-reduce — 2·N·D·4 bytes/round
+        # (scatter-back is free: the reduced bucket result is already
+        # replicated).  A shard-local bucketing layout would erase
+        # this term; until then it is budgeted explicitly so any
+        # growth beyond it still trips the gate.
+        ragged_gather = (2.0 * art.n * art.dim * 4
+                         if (art.ragged is not None
+                             and not art.cfg.compact) else 0.0)
+        return (self.safety * (consensus + rng + ragged_gather)
+                + self.scalar_allowance_bytes)
+
+    def check(self, art) -> RuleResult:
+        if not self.applies(art):
+            return _skip(self.name, "single device")
+        inv = H.collective_inventory(art.compiled_text,
+                                     world_size=art.world_size)
+        ar = inv.get("all-reduce", {"bytes": 0.0, "count": 0})
+        ag = inv.get("all-gather", {"raw_bytes": 0.0, "count": 0})
+        budget = self.budget_bytes(art)
+        violations = []
+        if ar["bytes"] > budget:
+            violations.append(
+                f"{art.key.name}: {ar['bytes']:.0f} all-reduce link "
+                f"bytes/round exceeds budget {budget:.0f}")
+        if ag.get("raw_bytes", 0.0) > self.allgather_max_bytes:
+            violations.append(
+                f"{art.key.name}: {ag['raw_bytes']:.0f} all-gather "
+                f"bytes — the replicated pool/state must not be "
+                f"gathered (max {self.allgather_max_bytes:.0f})")
+        metrics = {k: {"count": v["count"], "bytes": round(v["bytes"], 1)}
+                   for k, v in sorted(inv.items())}
+        metrics["budget_bytes"] = round(budget, 1)
+        return _result(self.name, violations, metrics)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTransferBan:
+    """The round must stay on device: no transfer or callback staging
+    in the jaxpr, no host-boundary ops in the compiled module."""
+
+    name: str = "no-host-transfers"
+    banned_prims: tuple = ("device_put", "io_callback", "pure_callback",
+                           "debug_callback", "callback", "infeed",
+                           "outfeed")
+
+    def applies(self, art) -> bool:
+        return True
+
+    def check(self, art) -> RuleResult:
+        counts = H.jaxpr_eqn_counts(art.jaxpr)
+        violations = []
+        staged = {}
+        for prim in self.banned_prims:
+            c = counts.get(prim, 0)
+            if c:
+                staged[prim] = c
+                violations.append(
+                    f"{art.key.name}: {c} {prim} eqn(s) in the round "
+                    f"jaxpr")
+        hlo_ops = 0
+        if art.compiled_text is not None:
+            hlo_ops = H.count_host_transfer_ops(art.compiled_text)
+            if hlo_ops:
+                violations.append(
+                    f"{art.key.name}: {hlo_ops} host-boundary op(s) in "
+                    f"the compiled module")
+        return _result(self.name, violations,
+                       {"jaxpr": staged, "hlo_host_ops": hlo_ops})
+
+
+#: The engine's performance contract, in evaluation order.
+RULES = (
+    FusedPassBudget(),
+    FullWidthSweepBudget(),
+    DtypeBan(),
+    DonationAudit(),
+    CollectiveBudget(),
+    HostTransferBan(),
+)
+
+
+def evaluate(art, rules=RULES) -> list:
+    """All rule results for one artifact (skips included)."""
+    return [rule.check(art) for rule in rules]

@@ -350,6 +350,12 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
                 plan.committed, losses, plan.valid,
                 plan.limit.reshape((1,)))
 
+    # Static plan facts for the analysis layer (repro.analysis): the
+    # solve width and limit bounds the compiled program was built for.
+    block.static_info = {"capacity": capacity, "c_min": c_min,
+                         "adaptive": adaptive, "is_admm": is_admm,
+                         "use_admm_kernel": use_admm_kernel,
+                         "ragged": ragged is not None}
     return block
 
 
@@ -373,8 +379,12 @@ def shard_mapped_block(block: Callable, mesh, *, axis: str = "clients",
     c, r = P(axis), P()
     data_spec = (r, r) if ragged else (c, c)
     extra = (c, c) if ragged else ()
-    return shard_map(
+    mapped = shard_map(
         block, mesh=mesh,
         in_specs=(c, c, c, c, c, c, c, c, r) + data_spec + (c,) + extra,
         out_specs=(c, c, c, c, c, c, c, c, c),
         check_rep=False)
+    info = getattr(block, "static_info", None)
+    if info is not None:  # carried through for the analysis layer
+        mapped.static_info = dict(info, n_shards=mesh.shape[axis])
+    return mapped

@@ -347,7 +347,8 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                   *, jit: bool = True, mesh=None,
                   client_axis: str = "clients", donate: bool | None = None,
                   ctrl_arg: bool = False, spec: FlatSpec | None = None,
-                  ragged: RaggedSpec | None = None):
+                  ragged: RaggedSpec | None = None,
+                  body_transform: Callable | None = None):
     """Build the per-round step.
 
     loss_fn(params, x_batch, y_batch) -> scalar mean loss.
@@ -379,6 +380,13 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             solves on the dense path, slot-gathered slices at the
             static max(nᵢ) shape on the compacted path.  Uniform sizes
             reproduce the rectangular engines bit for bit.
+
+    body_transform: optional wrapper applied to the finished round
+            function *before* jit — ``round_fn = body_transform(
+            round_fn)``.  The hook the static-analysis layer
+            (``repro.analysis``) uses to count traces (retrace sentry)
+            and to seed mutations in its self-tests; transforms must
+            preserve the round signature.
 
     Returns round_fn(state[, ctrl_overrides]) -> (state, RoundMetrics).
     """
@@ -507,6 +515,20 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                  else theta_out)
         return theta_out, lam_new, z_new, losses
 
+    # Per-bucket gather constants, staged once at build time.  The
+    # traced round closes over them (they become jaxpr constants), so
+    # no host→device transfer is staged inside the round — the
+    # host-transfer rule in repro.analysis pins this down.
+    if ragged is not None:
+        _bucket_consts = tuple(
+            (bucket,
+             jnp.asarray(bucket.members, jnp.int32),
+             jnp.asarray([ragged.offsets[i] for i in bucket.members],
+                         jnp.int32),
+             (jnp.asarray([ragged.sizes[i] for i in bucket.members],
+                          jnp.int32) if bucket.padded else None))
+            for bucket in ragged.buckets)
+
     def ragged_dense_update(state, events, data_rng):
         """All-N solve over pooled CSR data, one vmap per size bucket.
 
@@ -523,19 +545,15 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
         keys = jax.random.split(data_rng, n)
         theta_out = theta_init  # every row overwritten below
         losses = jnp.zeros((n,), jnp.float32)
-        for bucket in ragged.buckets:
-            mem = np.asarray(bucket.members)
-            rows = jax.tree.map(lambda a: a[mem], (theta_init, center))
+        for bucket, mem, offs, szs in _bucket_consts:
+            rows = jax.tree.map(lambda a, m=mem: a[m],
+                                (theta_init, center))
             bucket_epochs = partial(_epoch_indices,
                                     n_points=bucket.capacity,
                                     batch_size=cfg.batch_size,
                                     epochs=cfg.epochs)
             idx_v = jax.vmap(bucket_epochs)(keys[mem])
-            offs = jnp.asarray([ragged.offsets[i] for i in bucket.members],
-                               jnp.int32)
             if bucket.padded:
-                szs = jnp.asarray(
-                    [ragged.sizes[i] for i in bucket.members], jnp.int32)
                 th, ls = jax.vmap(
                     masked_solver, in_axes=(0, 0, None, None, 0, 0, 0))(
                     rows[0], rows[1], data["x"], data["y"], offs, szs,
@@ -545,7 +563,7 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                 th, ls = jax.vmap(solver, in_axes=(0, 0, None, None, 0))(
                     rows[0], rows[1], data["x"], data["y"], gidx)
             theta_out = jax.tree.map(
-                lambda acc, r: acc.at[mem].set(r.astype(acc.dtype)),
+                lambda acc, r, m=mem: acc.at[m].set(r.astype(acc.dtype)),
                 theta_out, th)
             losses = losses.at[mem].set(ls)
         theta_out = pin(theta_out)
@@ -688,6 +706,9 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
     else:
         def round_fn(state):
             return round_body(state, None)
+
+    if body_transform is not None:
+        round_fn = body_transform(round_fn)
 
     if not jit:
         return round_fn

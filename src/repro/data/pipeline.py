@@ -36,7 +36,7 @@ def stack_trimmed(shards_x, shards_y, *, seed: int = 0):
     rng = np.random.default_rng(seed)
     n_min = min(len(s) for s in shards_y)
     xs, ys, total = [], [], 0
-    for sx, sy in zip(shards_x, shards_y):
+    for sx, sy in zip(shards_x, shards_y, strict=True):
         idx = rng.permutation(len(sy))[:n_min]
         xs.append(np.asarray(sx)[idx])
         ys.append(np.asarray(sy)[idx])

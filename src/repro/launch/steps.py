@@ -89,9 +89,9 @@ def make_train_step(model: Model, mesh, *, batch: int, seq: int,
                     lambda x: jnp.zeros(x.shape, x.dtype), params)
                 for i in range(grad_accum):
                     micro = jax.tree.map(
-                        lambda x: x.reshape((grad_accum,
-                                             x.shape[0] // grad_accum)
-                                            + x.shape[1:])[i], batch)
+                        lambda x, i=i: x.reshape(
+                            (grad_accum, x.shape[0] // grad_accum)
+                            + x.shape[1:])[i], batch)
                     li, gi = jax.value_and_grad(model.loss)(params, micro)
                     loss = loss + li / grad_accum
                     g = jax.tree.map(

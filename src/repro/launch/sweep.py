@@ -239,7 +239,7 @@ def main():
           "inflight_depth,final_train_loss")
     for (seed, k, tgt), rate, slk, q, fl, loss in zip(
             runs, rates, slacks, queues, inflight,
-            np.asarray(hist.train_loss[-1])):
+            np.asarray(hist.train_loss[-1]), strict=True):
         print(f"{seed},{k},{tgt},{rate:.3f},{slk:.2f},{int(q)},{int(fl)},"
               f"{loss:.5f}")
 

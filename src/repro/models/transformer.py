@@ -194,7 +194,7 @@ def _stack_attn(cfg, params, h, positions, *, mask_mode, prefix_len):
     def body(carry, glp):
         hh, aux = carry
         for i in range(g):
-            lp = jax.tree.map(lambda x: x[i], glp) if g > 1 else glp
+            lp = jax.tree.map(lambda x, i=i: x[i], glp) if g > 1 else glp
             hh, a = _attn_block_apply(cfg, lp, hh, positions,
                                       mask_mode=mask_mode,
                                       prefix_len=prefix_len,
@@ -213,7 +213,7 @@ def _stack_ssm(cfg, params, h):
 
     def body(hh, glp):
         for i in range(g):
-            lp = jax.tree.map(lambda x: x[i], glp) if g > 1 else glp
+            lp = jax.tree.map(lambda x, i=i: x[i], glp) if g > 1 else glp
             hh = _ssm_block_apply(cfg, lp, hh)
         return hh, None
 

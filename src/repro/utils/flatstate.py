@@ -57,9 +57,12 @@ class FlatSpec:
     def unflatten(self, vec: jax.Array):
         """(D,) vector → pytree with the template's shapes and dtypes."""
         leaves = [
-            jax.lax.slice_in_dim(vec, o, o + int(np.prod(s, dtype=np.int64)))
+            jax.lax.slice_in_dim(
+                vec, o,
+                o + int(np.prod(s, dtype=np.int64)))  # tracecheck: ok
             .reshape(s).astype(d)
-            for o, s, d in zip(self.offsets, self.shapes, self.dtypes)
+            for o, s, d in zip(self.offsets, self.shapes, self.dtypes,
+                               strict=True)
         ]
         return jax.tree.unflatten(self.treedef, leaves)
 

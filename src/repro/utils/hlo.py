@@ -1,9 +1,13 @@
-"""HLO-text analysis: collective inventory for the roofline.
+"""HLO-text and jaxpr analysis: collective inventory, donation
+aliases, entry signatures, op budgets.
 
 `cost_analysis()` does not expose collective traffic, so we parse the
 compiled (post-SPMD) HLO.  Shapes in the compiled module are already
 per-device, so summed operand bytes are per-chip quantities — exactly
-what the roofline's collective term wants.
+what the roofline's collective term wants.  The same parsers back the
+``repro.analysis`` rule engine: donation audits read the module
+header's ``input_output_alias`` map, collective budgets read the
+inventory, host-transfer bans read instruction sites.
 
 Ring-algorithm byte multipliers (bytes actually serialized on links,
 per device, group size n):
@@ -15,6 +19,7 @@ per device, group size n):
 """
 from __future__ import annotations
 
+import math
 import re
 from collections import defaultdict
 
@@ -44,6 +49,10 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16,
+    # low-precision families (one byte unless noted)
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 0.5, "s4": 0.5, "u4": 0.5,
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -52,12 +61,12 @@ _OP_RE = re.compile(
     r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
     r"reduce-scatter|all-to-all|collective-permute-start|"
     r"collective-permute)\b(.*)$")
-_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*(?:,|$)")
-_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# iota form: replica_groups=[G,S]<=[...] (G groups of S) or [N]<=[...]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=\[")
 
 
 def _shape_bytes(shape_str: str) -> int:
-    total = 0
+    total = 0.0
     for dtype, dims in _SHAPE_RE.findall(shape_str):
         if dtype not in _DTYPE_BYTES:
             continue
@@ -66,19 +75,55 @@ def _shape_bytes(shape_str: str) -> int:
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dtype]
-    return total
+    return int(math.ceil(total))
+
+
+def _balanced_braces(text: str, start: int) -> str | None:
+    """Contents of the brace group opening at ``text[start] == '{'``."""
+    if start < 0 or start >= len(text) or text[start] != "{":
+        return None
+    depth, j = 0, start
+    while j < len(text):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start + 1:j]
+        j += 1
+    return None
 
 
 def _group_size(rest: str, default: int) -> int:
-    m = _GROUPS_SHAPE_RE.search(rest)
-    if m:  # replica_groups=[G,S]<=[...] form: G groups of size S
-        return int(m.group(2))
-    m = _GROUPS_RE.search(rest)
+    """Size of the largest replica group named on a collective line.
+
+    Handles the explicit list form (``replica_groups={{0,1},{2,3,4,5}}``
+    → 4, not the first group's 2), the flat single-group form
+    (``replica_groups={0,1,2}`` → 3) and both iota forms
+    (``[G,S]<=[...]`` → S, ``[N]<=[...]`` → N).  Falls back to
+    ``default`` (the world size) when no group annotation is present.
+    """
+    m = _GROUPS_IOTA_RE.search(rest)
     if m:
-        first = m.group(1).split("}")[0].lstrip("{")
-        ids = [x for x in first.split(",") if x.strip() != ""]
-        if ids:
-            return len(ids)
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        if dims:
+            return dims[-1]
+    key = "replica_groups="
+    at = rest.find(key)
+    if at >= 0:
+        body = _balanced_braces(rest, at + len(key))
+        if body is not None:
+            groups = re.findall(r"\{([^{}]*)\}", body)
+            if groups:  # explicit list of groups
+                sizes = [len([t for t in g.split(",") if t.strip()])
+                         for g in groups]
+                sizes = [s for s in sizes if s > 0]
+                if sizes:
+                    return max(sizes)
+            else:  # one flat group
+                ids = [t for t in body.split(",") if t.strip()]
+                if ids:
+                    return len(ids)
     return default
 
 
@@ -120,8 +165,104 @@ def total_collective_bytes(hlo_text: str, *, world_size: int) -> float:
 
 
 def count_op(hlo_text: str, opname: str) -> int:
-    """Number of <opname>(...) call sites (not name mentions)."""
-    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+    """Number of ``<opname>(...)`` *instruction sites*.
+
+    Only counts lines of the form ``%name = <shape> <opname>(...)`` —
+    bare name mentions inside fusion labels, ``calls=`` references or
+    ``metadata={op_name="..."}`` strings do not match.
+    """
+    pat = re.compile(
+        r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)\s+" + re.escape(opname) + r"\(")
+    return sum(1 for line in hlo_text.splitlines() if pat.search(line))
+
+
+_ALIAS_PAIR_RE = re.compile(
+    r"\{([\d\s,]*)\}:\s*\((\d+),\s*\{([\d\s,]*)\}\s*(?:,\s*([\w-]+))?\)")
+
+
+def parse_input_output_aliases(hlo_text: str) -> list:
+    """Donation/aliasing map from the module header.
+
+    Parses ``input_output_alias={ {0}: (0, {}, may-alias), ... }`` into
+    a list of ``{"output_index", "param_number", "param_index",
+    "kind"}`` dicts.  Empty when the module declares no aliasing (e.g.
+    a jit without donated arguments).
+    """
+    key = "input_output_alias="
+    at = hlo_text.find(key)
+    if at < 0:
+        return []
+    body = _balanced_braces(hlo_text, at + len(key))
+    if body is None:
+        return []
+    out = []
+    for m in _ALIAS_PAIR_RE.finditer(body):
+        out.append({
+            "output_index": tuple(
+                int(t) for t in m.group(1).split(",") if t.strip()),
+            "param_number": int(m.group(2)),
+            "param_index": tuple(
+                int(t) for t in m.group(3).split(",") if t.strip()),
+            "kind": m.group(4) or "may-alias",
+        })
+    return out
+
+
+_PARAM_RE = re.compile(r"([%\w.\-]+)\s*:\s*(\w+)\[([\d,]*)\]")
+
+
+def entry_parameters(hlo_text: str) -> list:
+    """``[(name, dtype, shape)]`` of the ENTRY computation's parameters.
+
+    Shapes are per-device in a post-SPMD module, so together with
+    :func:`parse_input_output_aliases` this answers "which state
+    buffers does the compiled round update in place".
+    """
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls.startswith("ENTRY "):
+            continue
+        head = ls.split(" -> ")[0]
+        lp = head.find("(")
+        if lp < 0:
+            return []
+        sig = head[lp + 1:]
+        if sig.endswith(")"):
+            sig = sig[:-1]
+        return [
+            (name, dtype, tuple(int(d) for d in dims.split(",") if d))
+            for name, dtype, dims in _PARAM_RE.findall(sig)
+        ]
+    return []
+
+
+#: numpy dtype name → HLO dtype token (for matching state leaves
+#: against entry-parameter shapes).
+NUMPY_TO_HLO_DTYPE = {
+    "bool": "pred", "int8": "s8", "uint8": "u8", "int16": "s16",
+    "uint16": "u16", "bfloat16": "bf16", "float16": "f16",
+    "int32": "s32", "uint32": "u32", "float32": "f32", "int64": "s64",
+    "uint64": "u64", "float64": "f64", "complex64": "c64",
+    "complex128": "c128",
+}
+
+
+def count_dtype_refs(hlo_text: str, dtype: str = "f64") -> int:
+    """Occurrences of ``dtype[...]`` shapes anywhere in the module."""
+    return len(re.findall(rf"\b{re.escape(dtype)}\[", hlo_text))
+
+
+#: HLO opcodes that move data across the host boundary.
+HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "recv")
+
+
+def count_host_transfer_ops(hlo_text: str) -> int:
+    """Host-boundary instruction sites: infeed/outfeed/send/recv plus
+    python-callback custom-calls."""
+    n = sum(count_op(hlo_text, op) for op in HOST_TRANSFER_OPS)
+    n += len(re.findall(r'custom_call_target="[^"]*callback[^"]*"',
+                        hlo_text))
+    return n
 
 
 def jaxpr_eqn_counts(jaxpr) -> dict:
@@ -155,6 +296,37 @@ def jaxpr_eqn_counts(jaxpr) -> dict:
 
     visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
     return dict(counts)
+
+
+def jaxpr_dtypes(jaxpr) -> set:
+    """Set of output dtype names over all equations (recursive).
+
+    The static half of the no-f64 rule: a stray ``float64`` promotion
+    (x64 mode, a numpy scalar leaking in) shows up in the jaxpr long
+    before the compiled module.
+    """
+    dtypes: set = set()
+
+    def visit_param(v):
+        if hasattr(v, "eqns"):
+            visit(v)
+        elif hasattr(v, "jaxpr"):
+            visit(v.jaxpr)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                visit_param(item)
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            for ov in eqn.outvars:
+                dt = getattr(ov.aval, "dtype", None)
+                if dt is not None:
+                    dtypes.add(str(dt))
+            for v in eqn.params.values():
+                visit_param(v)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return dtypes
 
 
 def toplevel_elementwise_shapes(jaxpr, prims=("add", "sub", "mul")) -> list:

@@ -144,7 +144,7 @@ def _bucket_plan(sizes: Sequence[int],
     member list is exactly ``range(N)`` — the identity layout the
     bit-for-bit parity relies on.
     """
-    uniq = sorted(set(int(s) for s in sizes))
+    uniq = sorted({int(s) for s in sizes})
     if len(uniq) <= max_buckets:
         caps = uniq
     else:

@@ -1,0 +1,392 @@
+"""tracecheck self-tests: HLO parser units, the AST lint, the rule
+engine over cheap jaxpr-only artifacts, and the baseline-compare gate.
+
+The jaxpr-only rule assertions here are the tier-1 migration of the
+old ``--runslow`` fused-round op-count tests (``TestFusedRoundOpCounts``
+in tests/test_compact.py): tracing a round is cheap, so the Pallas-call
+and full-width-sweep budgets now gate every PR instead of nightly only.
+The compiled-module mutation matrix lives in
+tests/test_analysis_mutations.py.
+"""
+import copy
+
+import pytest
+
+from repro.analysis import astlint
+from repro.analysis.artifacts import (
+    ConfigKey,
+    FAST_MATRIX,
+    FULL_MATRIX,
+    build_artifact,
+)
+from repro.analysis.cli import compare_to_baseline, report_failures
+from repro.analysis.rules import evaluate
+from repro.utils import hlo as H
+
+# ---------------------------------------------------------------------------
+# HLO parser units
+# ---------------------------------------------------------------------------
+
+
+class TestGroupSizes:
+    def _ar(self, groups: str) -> str:
+        return (f"  %ar = f32[64]{{0}} all-reduce(%x), "
+                f"replica_groups={groups}, to_apply=%add\n")
+
+    def _link_frac(self, groups: str, world_size: int = 8) -> float:
+        inv = H.collective_inventory(self._ar(groups),
+                                     world_size=world_size)
+        return inv["all-reduce"]["bytes"] / (2.0 * 64 * 4)
+
+    def test_multi_group_uses_largest(self):
+        # {{0,1},{2,3,4,5}} → the budget must charge the 4-wide group,
+        # not the first group's 2.
+        assert self._link_frac("{{0,1},{2,3,4,5}}") == pytest.approx(3 / 4)
+
+    def test_iota_two_dim(self):
+        # [2,4]<=[8]: 2 groups of 4.
+        assert self._link_frac("[2,4]<=[8]") == pytest.approx(3 / 4)
+
+    def test_iota_flat(self):
+        # [8]<=[8]: one group of 8.
+        assert self._link_frac("[8]<=[8]") == pytest.approx(7 / 8)
+
+    def test_flat_single_group(self):
+        assert self._link_frac("{0,1,2}") == pytest.approx(2 / 3)
+
+    def test_no_annotation_falls_back_to_world_size(self):
+        line = "  %ar = f32[64]{0} all-reduce(%x), to_apply=%add\n"
+        inv = H.collective_inventory(line, world_size=4)
+        assert inv["all-reduce"]["bytes"] == pytest.approx(
+            2.0 * 64 * 4 * 3 / 4)
+
+
+class TestCountOp:
+    MENTIONS = (
+        '  %fusion.1 = f32[8]{0} fusion(%a), kind=kLoop, '
+        'calls=%all-reduce_fusion, metadata={op_name="jit(f)/all-reduce"}\n'
+        "  %ar.1 = f32[8]{0} all-reduce(%a), replica_groups={{0,1}}, "
+        "to_apply=%add\n")
+
+    def test_instruction_sites_only(self):
+        # The fusion label and the op_name metadata string both mention
+        # "all-reduce" — only the real instruction site counts.
+        assert H.count_op(self.MENTIONS, "all-reduce") == 1
+
+    def test_tuple_result_site(self):
+        text = ("  %t = (f32[8]{0}, u32[]) all-to-all(%a, %b), "
+                "replica_groups={{0,1}}\n")
+        assert H.count_op(text, "all-to-all") == 1
+
+
+class TestNarrowDtypes:
+    def test_f8_bytes(self):
+        text = ("  %ag = f8e4m3[64,2]{1,0} all-gather(%x), "
+                "replica_groups={{0,1}}, dimensions={0}\n")
+        inv = H.collective_inventory(text, world_size=2)
+        assert inv["all-gather"]["raw_bytes"] == pytest.approx(128.0)
+
+    def test_sub_byte_rounds_up(self):
+        text = ("  %ag = f4e2m1fn[3]{0} all-gather(%x), "
+                "replica_groups={{0,1}}, dimensions={0}\n")
+        inv = H.collective_inventory(text, world_size=2)
+        assert inv["all-gather"]["raw_bytes"] == pytest.approx(2.0)
+
+
+class TestAliasAndEntryParsing:
+    HEADER = (
+        "HloModule jit_round_fn, input_output_alias={ {0}: (0, {}, "
+        "may-alias), {1}: (2, {}, must-alias), {2, 0}: (3, {1}) }, "
+        "entry_computation_layout={(f32[32,16])->f32[]}\n"
+        "\n"
+        "ENTRY %main.42 (Arg_0.1: f32[32,16], Arg_1.2: f32[32,16], "
+        "Arg_2.3: u32[64], Arg_3.4: s32[]) -> (f32[32,16], f32[]) {\n"
+        "  ROOT %r = f32[] constant(0)\n"
+        "}\n")
+
+    def test_alias_entries(self):
+        aliases = H.parse_input_output_aliases(self.HEADER)
+        assert len(aliases) == 3
+        assert aliases[0] == {"output_index": (0,), "param_number": 0,
+                              "param_index": (), "kind": "may-alias"}
+        assert aliases[1]["param_number"] == 2
+        assert aliases[1]["kind"] == "must-alias"
+        # Nested param index (tuple-typed parameter leaf).
+        assert aliases[2]["output_index"] == (2, 0)
+        assert aliases[2]["param_index"] == (1,)
+
+    def test_no_alias_header(self):
+        assert H.parse_input_output_aliases("HloModule bare\n") == []
+
+    def test_entry_parameters(self):
+        params = H.entry_parameters(self.HEADER)
+        assert params == [
+            ("Arg_0.1", "f32", (32, 16)),
+            ("Arg_1.2", "f32", (32, 16)),
+            ("Arg_2.3", "u32", (64,)),
+            ("Arg_3.4", "s32", ()),
+        ]
+
+
+class TestHostAndDtypeScans:
+    def test_count_dtype_refs(self):
+        text = "  %a = f64[4]{0} add(%x, %y)\n  %b = f32[4]{0} copy(%a)\n"
+        assert H.count_dtype_refs(text, "f64") == 1
+        assert H.count_dtype_refs(text, "c128") == 0
+
+    def test_host_transfer_sites(self):
+        text = (
+            "  %o = token[] outfeed(%x, %tok)\n"
+            '  %cc = f32[2]{0} custom-call(%x), '
+            'custom_call_target="xla_python_cpu_callback"\n'
+            '  %f = f32[2]{0} fusion(%x), metadata={op_name="outfeed"}\n')
+        assert H.count_host_transfer_ops(text) == 2
+
+
+# ---------------------------------------------------------------------------
+# AST lint
+# ---------------------------------------------------------------------------
+
+
+class TestAstLint:
+    SCOPES = {"m.py": ("traced",)}
+
+    def _codes(self, src, scopes=None):
+        return [f.code for f in astlint.lint_source(
+            src, "m.py", scopes=scopes or self.SCOPES)]
+
+    def test_repo_is_clean(self):
+        findings = astlint.lint_repo()
+        assert findings == [], [f"{f.path}:{f.line} {f.code}"
+                                for f in findings]
+
+    def test_tc101_numpy_call(self):
+        src = "def traced(x):\n    return np.sum(x)\n"
+        assert self._codes(src) == ["TC101"]
+
+    def test_tc102_item(self):
+        src = "def traced(x):\n    return x.sum().item()\n"
+        assert self._codes(src) == ["TC102"]
+
+    def test_tc103_float_coercion(self):
+        src = "def traced(x):\n    return float(jnp.sum(x))\n"
+        assert self._codes(src) == ["TC103"]
+
+    def test_tc104_python_branch(self):
+        src = ("def traced(x):\n"
+               "    if jnp.any(x > 0):\n"
+               "        return x\n"
+               "    return -x\n")
+        assert self._codes(src) == ["TC104"]
+
+    def test_pragma_exempts_the_line(self):
+        src = ("def traced(shape):\n"
+               "    return int(np.prod(shape))  # tracecheck: ok\n")
+        assert self._codes(src) == []
+
+    def test_pragma_on_other_line_does_not_exempt(self):
+        src = ("def traced(shape):\n"
+               "    # tracecheck: ok\n"
+               "    return int(np.prod(shape))\n")
+        assert self._codes(src) == ["TC101"]
+
+    def test_nested_function_inherits_traced_scope(self):
+        src = ("def traced(x):\n"
+               "    def inner(y):\n"
+               "        return np.sum(y)\n"
+               "    return inner(x)\n")
+        assert self._codes(src) == ["TC101"]
+
+    def test_nested_lambda_inherits_traced_scope(self):
+        src = ("def traced(xs):\n"
+               "    return jax.tree.map(lambda y: np.abs(y), xs)\n")
+        assert self._codes(src) == ["TC101"]
+
+    def test_untraced_function_ignored(self):
+        src = "def helper(x):\n    return np.sum(x)\n"
+        assert self._codes(src) == []
+
+    def test_module_level_lambda_ignored(self):
+        src = "f = lambda x: np.sum(x)\n"
+        assert self._codes(src) == []
+
+    def test_unregistered_module_not_linted(self):
+        src = "def traced(x):\n    return np.sum(x)\n"
+        assert astlint.lint_source(src, "other.py",
+                                   scopes=self.SCOPES) == []
+
+    def test_missing_registered_module(self, tmp_path):
+        findings = astlint.lint_repo(
+            src_root=tmp_path, scopes={"ghost.py": "*"})
+        assert [f.code for f in findings] == ["TC100"]
+
+    def test_star_scope_lints_every_function(self):
+        src = "def anything(x):\n    return np.sum(x)\n"
+        assert self._codes(src, scopes={"m.py": "*"}) == ["TC101"]
+
+
+# ---------------------------------------------------------------------------
+# Rule engine over cheap jaxpr-only artifacts (tier-1 op-count gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def jaxpr_arts():
+    keys = (
+        ConfigKey("dense", "flat", "sync", "uniform", 1),
+        ConfigKey("compact", "flat", "sync", "uniform", 1),
+        ConfigKey("dense", "tree", "sync", "uniform", 1),
+        ConfigKey("compact", "flat", "async", "ragged", 1),
+    )
+    return {k.name: build_artifact(k, compile=False) for k in keys}
+
+
+def _by_rule(art):
+    return {r.rule: r for r in evaluate(art)}
+
+
+class TestRuleEngineJaxpr:
+    def test_flat_rounds_have_two_fused_passes(self, jaxpr_arts):
+        for name in ("dense-flat-sync-uniform-1d",
+                     "compact-flat-sync-uniform-1d",
+                     "compact-flat-async-ragged-1d"):
+            res = _by_rule(jaxpr_arts[name])["fused-admm-pass"]
+            assert res.status == "pass", res.violations
+            assert res.metrics["pallas_call"] == 2
+
+    def test_tree_round_is_pallas_free(self, jaxpr_arts):
+        res = _by_rule(
+            jaxpr_arts["dense-tree-sync-uniform-1d"])["fused-admm-pass"]
+        assert res.status == "pass", res.violations
+        assert res.metrics["pallas_call"] == 0
+
+    def test_dense_sweep_budget_is_one(self, jaxpr_arts):
+        res = _by_rule(
+            jaxpr_arts["dense-flat-sync-uniform-1d"])["no-full-width-sweeps"]
+        assert res.status == "pass", res.violations
+        assert res.metrics["full_width_sweeps"] <= 1
+
+    def test_compact_round_has_no_full_width_sweeps(self, jaxpr_arts):
+        for name in ("compact-flat-sync-uniform-1d",
+                     "compact-flat-async-ragged-1d"):
+            res = _by_rule(jaxpr_arts[name])["no-full-width-sweeps"]
+            assert res.status == "pass", res.violations
+            assert res.metrics["full_width_sweeps"] == 0
+
+    def test_jaxpr_rules_all_green(self, jaxpr_arts):
+        for name, art in jaxpr_arts.items():
+            for res in evaluate(art):
+                assert res.status != "fail", (name, res.rule,
+                                              res.violations)
+
+    def test_compiled_only_rules_skip_without_hlo(self, jaxpr_arts):
+        by_rule = _by_rule(jaxpr_arts["dense-flat-sync-uniform-1d"])
+        assert by_rule["donated-state-aliases"].status == "skip"
+        assert by_rule["collective-budget"].status == "skip"
+
+    def test_matrices_are_consistent(self):
+        assert len(FULL_MATRIX) == 32
+        assert set(FAST_MATRIX) <= set(FULL_MATRIX)
+        names = [k.name for k in FULL_MATRIX]
+        assert len(names) == len(set(names))
+
+
+# ---------------------------------------------------------------------------
+# Baseline compare gate
+# ---------------------------------------------------------------------------
+
+
+def _report():
+    return {
+        "_env": "jax=x;backend=cpu;machine=test",
+        "_matrix": "fast",
+        "lint": {"status": "pass", "findings": []},
+        "exec": {"single-trace": {"status": "pass", "violations": [],
+                                  "metrics": {"traces": 1}}},
+        "configs": {
+            "dense-flat-sync-uniform-1d": {
+                "fused-admm-pass": {
+                    "status": "pass", "violations": [],
+                    "metrics": {"pallas_call": 2, "expected": 2}},
+                "collective-budget": {
+                    "status": "skip", "violations": [],
+                    "metrics": {"skipped": "single device"}},
+            },
+            "dense-flat-sync-uniform-2d": {
+                "collective-budget": {
+                    "status": "pass", "violations": [],
+                    "metrics": {"all-reduce": {"count": 3, "bytes": 340.0},
+                                "budget_bytes": 736.0}},
+            },
+            "skipped-cfg": {"_status": "skip", "_reason": "needs 4 devices"},
+        },
+    }
+
+
+class TestCompareBaseline:
+    def test_identical_reports_have_no_regressions(self):
+        base = _report()
+        assert compare_to_baseline(base, copy.deepcopy(base)) == []
+
+    def test_status_regression(self):
+        fresh = _report()
+        cfg = fresh["configs"]["dense-flat-sync-uniform-1d"]
+        cfg["fused-admm-pass"]["status"] = "fail"
+        regs = compare_to_baseline(_report(), fresh)
+        assert any("pass → fail" in r for r in regs)
+
+    def test_pallas_count_drift(self):
+        fresh = _report()
+        cfg = fresh["configs"]["dense-flat-sync-uniform-1d"]
+        cfg["fused-admm-pass"]["metrics"]["pallas_call"] = 3
+        regs = compare_to_baseline(_report(), fresh)
+        assert any("pallas_call 2 → 3" in r for r in regs)
+
+    def test_allreduce_growth_beyond_drift(self):
+        fresh = _report()
+        cfg = fresh["configs"]["dense-flat-sync-uniform-2d"]
+        cfg["collective-budget"]["metrics"]["all-reduce"]["bytes"] = 500.0
+        regs = compare_to_baseline(_report(), fresh)
+        assert any("all-reduce bytes" in r for r in regs)
+
+    def test_allreduce_growth_within_drift_ok(self):
+        fresh = _report()
+        cfg = fresh["configs"]["dense-flat-sync-uniform-2d"]
+        cfg["collective-budget"]["metrics"]["all-reduce"]["bytes"] = 380.0
+        assert compare_to_baseline(_report(), fresh) == []
+
+    def test_vanished_configuration(self):
+        fresh = _report()
+        del fresh["configs"]["dense-flat-sync-uniform-1d"]
+        regs = compare_to_baseline(_report(), fresh)
+        assert any("vanished" in r for r in regs)
+
+    def test_vanished_rule(self):
+        fresh = _report()
+        del fresh["configs"]["dense-flat-sync-uniform-1d"]["fused-admm-pass"]
+        regs = compare_to_baseline(_report(), fresh)
+        assert any("rule vanished" in r for r in regs)
+
+    def test_baseline_skip_configs_ignored(self):
+        fresh = _report()
+        del fresh["configs"]["skipped-cfg"]
+        assert compare_to_baseline(_report(), fresh) == []
+
+    def test_report_failures_collects_all_layers(self):
+        rep = _report()
+        assert report_failures(rep) == []
+        rep["lint"] = {"status": "fail", "findings": [{"code": "TC101"}]}
+        rep["exec"]["single-trace"]["status"] = "fail"
+        cfg = rep["configs"]["dense-flat-sync-uniform-1d"]
+        cfg["fused-admm-pass"]["status"] = "fail"
+        assert len(report_failures(rep)) == 3
+
+    def test_committed_baseline_is_loadable(self):
+        import json
+        import pathlib
+        path = (pathlib.Path(__file__).resolve().parents[1]
+                / "benchmarks" / "baselines" / "ANALYSIS.json")
+        base = json.loads(path.read_text())
+        assert base["_matrix"] == "fast"
+        assert set(base["configs"]) == {k.name for k in FAST_MATRIX}
+        assert compare_to_baseline(base, copy.deepcopy(base)) == []

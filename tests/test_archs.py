@@ -65,7 +65,7 @@ class TestSmokeTrainStep:
         changed = any(
             not np.allclose(np.asarray(a, np.float32),
                             np.asarray(b, np.float32))
-            for a, b in zip(leaves_old, leaves_new))
+            for a, b in zip(leaves_old, leaves_new, strict=True))
         assert changed, f"{arch}: no parameter moved"
 
     def test_loss_decreases_over_few_steps(self, arch_setup):

@@ -18,7 +18,7 @@ class TestStore:
         cfg, state = _state()
         path = save_checkpoint(str(tmp_path), 3, state)
         restored = load_checkpoint(path, state)
-        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def test_latest_discovery(self, tmp_path):

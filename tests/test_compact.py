@@ -453,51 +453,8 @@ class TestCompactShardedParity:
         assert result[f"{variant}/compact_sharded"]["deferred"] == 0
 
 
-@pytest.mark.slow
-class TestFusedRoundOpCounts:
-    """Acceptance: the jitted flat round contains exactly one fused
-    ADMM-update pass — λ⁺/center come out of ONE pallas_call and no
-    separate full-width λ/z/center elementwise sweep survives at the
-    top level (utils/hlo.py op-count assertions)."""
-
-    def _flat_round_jaxpr(self, compact):
-        n = 8
-        data, params0, ls = make_least_squares(n, 8, 5)
-        spec = make_flat_spec(params0)
-        cfg = _cfg(n, use_trigger_kernel=True, use_admm_kernel=True,
-                   compact=compact, capacity=n)
-        state = init_state(cfg, params0, spec=spec)
-        round_fn = make_round_fn(cfg, ls, data, spec=spec, jit=False)
-        return jax.make_jaxpr(round_fn)(state), n, spec.dim
-
-    def test_exactly_one_fused_admm_pass(self):
-        from repro.utils.hlo import jaxpr_eqn_counts
-        jaxpr, _, _ = self._flat_round_jaxpr(compact=False)
-        counts = jaxpr_eqn_counts(jaxpr)
-        # one trigger-norm kernel + one fused λ⁺/center kernel
-        assert counts.get("pallas_call") == 2, counts.get("pallas_call")
-
-    def test_no_separate_lambda_center_sweeps(self):
-        from repro.utils.hlo import toplevel_elementwise_shapes
-        jaxpr, n, d = self._flat_round_jaxpr(compact=False)
-        full = [s for s in toplevel_elementwise_shapes(jaxpr)
-                if s == (n, d)]
-        # the single allowed full-width elementwise op is the post-solve
-        # z = θ_out + λ⁺ assembly (fused into the commit by XLA)
-        assert len(full) <= 1, full
-
-    def test_compact_round_also_single_fused_pass(self):
-        from repro.utils.hlo import jaxpr_eqn_counts
-        jaxpr, _, _ = self._flat_round_jaxpr(compact=True)
-        counts = jaxpr_eqn_counts(jaxpr)
-        assert counts.get("pallas_call") == 2, counts.get("pallas_call")
-
-    def test_tree_layout_reference_has_no_kernel(self):
-        from repro.utils.hlo import jaxpr_eqn_counts
-        n = 8
-        data, params0, ls = make_least_squares(n, 8, 5)
-        cfg = _cfg(n)  # kernels auto-off on CPU, tree layout
-        state = init_state(cfg, params0)
-        round_fn = make_round_fn(cfg, ls, data, jit=False)
-        counts = jaxpr_eqn_counts(jax.make_jaxpr(round_fn)(state))
-        assert counts.get("pallas_call") is None
+# The fused-round op-count assertions (exactly one Pallas ADMM pass,
+# no surviving full-width sweeps, tree layout kernel-free) moved onto
+# the repro.analysis rule engine -- tests/test_analysis.py runs them
+# in tier-1 over a fast configuration subset, and the tracecheck CLI
+# gates the full matrix nightly.  See docs/analysis.md.

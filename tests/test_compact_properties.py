@@ -46,7 +46,7 @@ def _play(events_seq, distances_seq, n, capacity, *, limit=None,
     (plan, pending_before, queue_after)."""
     queue = init_queue(n)
     out = []
-    for events, dist in zip(events_seq, distances_seq):
+    for events, dist in zip(events_seq, distances_seq, strict=True):
         pending = np.asarray(queue.age) > 0
         plan = compact_plan(jnp.asarray(events), jnp.asarray(dist),
                             capacity, age=queue.age, limit=limit)

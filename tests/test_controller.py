@@ -106,7 +106,7 @@ class TestTheorem2Tracking:
             events, _, _ = _run_closed_loop(cfg, dists)
             errs.append(abs(events.mean() - 0.3))
         # envelope: err_T * T bounded by a constant
-        scaled = [e * T for e, T in zip(errs, (500, 1000, 2000, 4000))]
+        scaled = [e * T for e, T in zip(errs, (500, 1000, 2000, 4000), strict=True)]
         assert max(scaled) <= max(
             tracking_error_bounds(cfg, 1.0, 1)[1],
             -tracking_error_bounds(cfg, 1.0, 1)[0])

@@ -71,10 +71,10 @@ class TestLabelShard:
                                   seed=3)
         c = partition_label_shard(ds.x_train, ds.y_train, n_clients=10,
                                   seed=4)
-        for sa, sb in zip(a[1], b[1]):
+        for sa, sb in zip(a[1], b[1], strict=True):
             np.testing.assert_array_equal(sa, sb)
         assert any(not np.array_equal(sa, sc)
-                   for sa, sc in zip(a[1], c[1]))
+                   for sa, sc in zip(a[1], c[1], strict=True))
 
     def test_infeasible_configs_raise(self):
         ds = make_synthetic_mnist(n_train=1000, n_test=100)
@@ -149,7 +149,7 @@ class TestDirichlet:
         ds = make_synthetic_cifar(n_train=2000, n_test=100)
         a = partition_dirichlet(ds.x_train, ds.y_train, n_clients=8, seed=7)
         b = partition_dirichlet(ds.x_train, ds.y_train, n_clients=8, seed=7)
-        for sa, sb in zip(a[1], b[1]):
+        for sa, sb in zip(a[1], b[1], strict=True):
             np.testing.assert_array_equal(sa, sb)
 
     @settings(max_examples=8, deadline=None)

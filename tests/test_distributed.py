@@ -41,7 +41,7 @@ class TestParamSpecs:
         for (path, shape), (_, spec) in zip(
                 jax.tree_util.tree_flatten_with_path(shapes)[0],
                 jax.tree_util.tree_flatten_with_path(
-                    specs, is_leaf=lambda x: isinstance(x, P))[0]):
+                    specs, is_leaf=lambda x: isinstance(x, P))[0], strict=True):
             for dim, axis in enumerate(spec):
                 if axis is None:
                     continue
@@ -52,7 +52,7 @@ class TestParamSpecs:
         flat_sh = jax.tree_util.tree_flatten_with_path(shapes)[0]
         flat_sp = jax.tree_util.tree_flatten_with_path(
             specs, is_leaf=lambda x: isinstance(x, P))[0]
-        for (path, shape), (_, spec) in zip(flat_sh, flat_sp):
+        for (path, shape), (_, spec) in zip(flat_sh, flat_sp, strict=True):
             names = [str(getattr(p, "key", "")) for p in path]
             if "layers" in names and len(spec) > 0:
                 assert spec[0] is None, (names, spec)
@@ -62,7 +62,7 @@ class TestParamSpecs:
         for (path, shape), (_, spec) in zip(
                 jax.tree_util.tree_flatten_with_path(shapes)[0],
                 jax.tree_util.tree_flatten_with_path(
-                    specs, is_leaf=lambda x: isinstance(x, P))[0]):
+                    specs, is_leaf=lambda x: isinstance(x, P))[0], strict=True):
             names = [str(getattr(p, "key", "")) for p in path]
             if "moe" in names and names[-1] == leaf:
                 return spec
@@ -183,7 +183,7 @@ class TestCrossPodExecution:
         assert result["events"][0] == [1, 1]
 
     def test_losses_finite_and_decreasing_when_active(self, result):
-        active = [l for e, l in zip(result["events"], result["losses"])
+        active = [l for e, l in zip(result["events"], result["losses"], strict=True)
                   if sum(e)]
         assert all(np.isfinite(l) for l in active)
 

@@ -29,7 +29,7 @@ class TestCodec:
         assert vec.shape == (spec.dim,) and vec.dtype == jnp.float32
         back = spec.unflatten(vec)
         assert jax.tree.structure(back) == jax.tree.structure(tree)
-        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree), strict=True):
             assert a.shape == b.shape and a.dtype == b.dtype
             np.testing.assert_allclose(np.asarray(a, np.float32),
                                        np.asarray(b, np.float32))
@@ -44,7 +44,7 @@ class TestCodec:
         mat = spec.flatten_stacked(stacked)
         assert mat.shape == (n, spec.dim)
         back = spec.unflatten_stacked(mat)
-        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(stacked)):
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(stacked), strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
     def test_spec_is_hashable_static(self):

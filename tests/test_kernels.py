@@ -65,7 +65,7 @@ class TestAdmmUpdate:
         w = _rand(rng, (d,), dtype)
         got = ops.admm_update(th, la, w, interpret=True)
         want = admm_update_ref(th, la, w)
-        for g, r in zip(got, want):
+        for g, r in zip(got, want, strict=True):
             np.testing.assert_allclose(
                 np.asarray(g, np.float32), np.asarray(r, np.float32),
                 rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6, atol=1e-2)
@@ -80,7 +80,7 @@ class TestAdmmUpdate:
         w = _rand(rng, (d,), jnp.float32)
         got = ops.admm_update(th, la, w, interpret=True)
         want = admm_update_ref(th, la, w)
-        for g, r in zip(got, want):
+        for g, r in zip(got, want, strict=True):
             np.testing.assert_allclose(np.asarray(g), np.asarray(r),
                                        rtol=1e-6, atol=1e-6)
 

@@ -101,7 +101,7 @@ class TestRaggedSpec:
         pooled, spec = pool_rows(shards)
         assert pooled.shape[0] == spec.buffer_rows
         back = spec.split(pooled)
-        for a, b in zip(shards, back):
+        for a, b in zip(shards, back, strict=True):
             np.testing.assert_array_equal(a, b)
 
     def test_rejects_bad_sizes(self):
