@@ -15,8 +15,14 @@ keeps them honest:
 * **kernels** — modeled HBM bytes may never increase (deterministic),
   µs compared under the looser ``--kernel-tolerance`` (interpret-mode
   CPU timings are noisy);
+* **solver HBM model** — ``modeled_solver_hbm_bytes_per_round`` is
+  deterministic and may never increase (a dataflow regression — e.g.
+  the fused commit falling back to three passes — not noise);
 * **async parity** — the fresh report's ``async_parity`` flag (the
-  staleness-0 pipeline tracking the synchronous engine) must hold.
+  staleness-0 pipeline tracking the synchronous engine) must hold;
+* **fused commit** — ``compact_fused.fused_parity_bitexact`` (the fused
+  gather→ADMM→scatter commit tracking the three-pass reference bit for
+  bit) and ``compact_fused.roofline_within_15pct`` must hold.
 
 Wall-clock legs only run when the fresh artifacts carry the same
 ``_env`` fingerprint (jax version / backend / machine) as the
@@ -62,6 +68,10 @@ ROUND_SCHEMA = {
     "ragged_dirichlet": ("per_round_us", "solver_rows_per_round",
                          "data_rows_total", "uniform_parity_bitexact",
                          "conservation_ok"),
+    "compact_fused": ("per_round_us", "solver_rows_per_round",
+                      "speedup_vs_dense", "fused_parity_bitexact",
+                      "modeled_solver_hbm_bytes_per_round",
+                      "roofline_within_15pct"),
     "comparison": ("solver_rows_ratio", "speedup_per_round"),
     "async_parity": ("s0_matches_sync_compact",),
     "sweep": ("steady_us",),
@@ -201,6 +211,25 @@ def compare_round(base: dict, fresh: dict, gate: Gate, *,
             else:
                 gate.ok(f"round: {section} solver rows {f_rows} <= "
                         f"{b_rows}")
+        # The modeled solver-HBM split is deterministic (a pure function
+        # of N/C/D and the roofline formulas), so like solver rows it
+        # may never increase — an increase is a model or dataflow
+        # regression (e.g. the fused commit falling back to three
+        # passes), not noise.
+        b_hbm = entry.get("modeled_solver_hbm_bytes_per_round")
+        f_hbm = fresh_entry.get("modeled_solver_hbm_bytes_per_round")
+        if isinstance(b_hbm, numbers.Real):
+            if not isinstance(f_hbm, numbers.Real):
+                gate.fail(f"round: {section}."
+                          "modeled_solver_hbm_bytes_per_round missing "
+                          "fresh")
+            elif f_hbm > b_hbm:
+                gate.fail(f"round: {section} modeled solver HBM bytes "
+                          f"increased {b_hbm} -> {f_hbm} (any increase "
+                          "fails)")
+            else:
+                gate.ok(f"round: {section} solver HBM bytes {f_hbm} <= "
+                        f"{b_hbm}")
     parity = fresh.get("async_parity", {})
     if parity.get("s0_matches_sync_compact") is not True:
         gate.fail("round: async_parity.s0_matches_sync_compact is not "
@@ -217,6 +246,18 @@ def compare_round(base: dict, fresh: dict, gate: Gate, *,
         if ragged.get(flag) is not True:
             gate.fail(f"round: ragged_dirichlet.{flag} is not true in "
                       "the fresh report")
+        else:
+            gate.ok(f"round: {meaning}")
+    fused = fresh.get("compact_fused", {})
+    for flag, meaning in (("fused_parity_bitexact",
+                           "fused commit tracks the three-pass "
+                           "reference bit for bit (events AND ω)"),
+                          ("roofline_within_15pct",
+                           "fused round solver-state model within 15% "
+                           "of the kernel roofline")):
+        if fused.get(flag) is not True:
+            gate.fail(f"round: compact_fused.{flag} is not true in the "
+                      "fresh report")
         else:
             gate.ok(f"round: {meaning}")
 

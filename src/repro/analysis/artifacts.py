@@ -144,6 +144,9 @@ def build_config(key: ConfigKey, *, n: int = DEFAULT_N,
         max_staleness=2 if key.timing == "async" else None,
         use_admm_kernel=key.kernels_on,
         use_trigger_kernel=key.kernels_on,
+        # Policy (mirrored by the fused-admm-pass rule): the compacted
+        # flat round commits through the fused megakernel.
+        fused_gss=key.kernels_on and key.path == "compact",
     )
     kw.update(overrides or {})
     return FLConfig(**kw)

@@ -9,9 +9,13 @@ some configurations (e.g. collective budgets need ≥ 2 devices).
 The default ``RULES`` tuple encodes the engine's performance
 contract:
 
-- ``fused-admm-pass``     exactly two Pallas calls per flat round
-                          (fused λ⁺/center update + trigger norms),
-                          zero on the tree layout;
+- ``fused-admm-pass``     exactly two Pallas calls per flat round and
+                          the right two *by kernel name*: trigger
+                          norms plus the fused gather→ADMM→scatter
+                          megakernel on the compacted path (the
+                          standalone ``admm_update`` pass must be
+                          gone) or the ``admm_update`` pass on the
+                          dense path; zero kernels on the tree layout;
 - ``no-full-width-sweeps`` at most one surviving top-level (N, D)
                           elementwise sweep on the dense flat round
                           (the z assembly), zero on the compacted one;
@@ -66,24 +70,59 @@ def _skip(name: str, why: str) -> RuleResult:
 
 @dataclasses.dataclass(frozen=True)
 class FusedPassBudget:
-    """Pallas-call count: the flat round is exactly two fused passes."""
+    """Pallas-call count AND composition: two fused passes per flat
+    round, and the *right* two.
+
+    Policy (not read from the config — a mis-flagged config must turn
+    this rule red, not adapt it): a flat ADMM round launches the
+    trigger-norm kernel plus exactly ONE state kernel.  On the
+    compacted path that state kernel is the fused gather→ADMM→scatter
+    megakernel (``_fused_gss3``/``_fused_gss2``) and the separate
+    ``admm_update`` pass (``_kernel3``/``_kernel2``) must be gone; on
+    the dense path it is the ``admm_update`` pass.  The tree layout
+    launches no kernels.  Kernel identity comes from the pallas_call
+    equations' ``name_and_src_info`` (exact match on the kernel body's
+    function name).
+    """
 
     name: str = "fused-admm-pass"
-    expected_flat: int = 2   # admm_update + trigger_sq_norms
+    expected_flat: int = 2   # state kernel + trigger_sq_norms
     expected_tree: int = 0
+    fused_kernels: tuple = ("_fused_gss3", "_fused_gss2")
+    admm_kernels: tuple = ("_kernel3", "_kernel2")
 
     def applies(self, art) -> bool:
         return True
 
     def check(self, art) -> RuleResult:
+        from repro.core.fedback import ADMM_FAMILY
+
         counts = H.jaxpr_eqn_counts(art.jaxpr)
         got = counts.get("pallas_call", 0)
         want = (self.expected_flat if art.kernels_on
                 else self.expected_tree)
         violations = [] if got == want else [
             f"{art.key.name}: {got} pallas_call eqns, expected {want}"]
-        return _result(self.name, violations, {"pallas_call": got,
-                                               "expected": want})
+        names = H.jaxpr_pallas_kernel_names(art.jaxpr)
+        fused_got = sum(names.get(k, 0) for k in self.fused_kernels)
+        admm_got = sum(names.get(k, 0) for k in self.admm_kernels)
+        is_admm = art.cfg.algorithm in ADMM_FAMILY
+        fused_want = 1 if (art.kernels_on and is_admm
+                           and art.cfg.compact) else 0
+        admm_want = 1 if (art.kernels_on and is_admm
+                          and not art.cfg.compact) else 0
+        if fused_got != fused_want:
+            violations.append(
+                f"{art.key.name}: {fused_got} fused gather-solve-"
+                f"scatter kernel(s), policy expects {fused_want}")
+        if admm_got != admm_want:
+            violations.append(
+                f"{art.key.name}: {admm_got} standalone admm_update "
+                f"kernel(s), policy expects {admm_want}")
+        return _result(self.name, violations,
+                       {"pallas_call": got, "expected": want,
+                        "kernel_names": dict(sorted(names.items())),
+                        "fused": fused_got, "admm": admm_got})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,18 +275,12 @@ class CollectiveBudget:
         frac = (ws - 1) / ws
         consensus = 2.0 * frac * art.dim * 4        # (D,) f32 mean
         rng = 2.0 * frac * (2 * art.n * 4)          # u32 key fold
-        # The dense ragged round gathers each bucket's (θ, center)
-        # rows before its vmapped solve; members interleave across the
-        # sharded client axis, so SPMD lowers the constant-index
-        # gathers to masked-local + all-reduce — 2·N·D·4 bytes/round
-        # (scatter-back is free: the reduced bucket result is already
-        # replicated).  A shard-local bucketing layout would erase
-        # this term; until then it is budgeted explicitly so any
-        # growth beyond it still trips the gate.
-        ragged_gather = (2.0 * art.n * art.dim * 4
-                         if (art.ragged is not None
-                             and not art.cfg.compact) else 0.0)
-        return (self.safety * (consensus + rng + ragged_gather)
+        # The dense ragged round used to add 2·N·D·4 B here: its
+        # bucket gathers crossed shard boundaries and SPMD paid an
+        # all-reduce per round.  Shard-local member tables (PR 7)
+        # keep every bucket gather on its own device, so the budget
+        # is back to the consensus + RNG terms for every path.
+        return (self.safety * (consensus + rng)
                 + self.scalar_allowance_bytes)
 
     def check(self, art) -> RuleResult:

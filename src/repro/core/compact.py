@@ -237,7 +237,9 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
                        use_admm_kernel: bool = False,
                        c_min: int | None = None, adaptive: bool = False,
                        alpha: float = 0.9, ragged=None,
-                       masked_solver: Callable | None = None) -> Callable:
+                       masked_solver: Callable | None = None,
+                       fused: bool = False,
+                       use_fused_kernel: bool = False) -> Callable:
     """Build the per-shard gather→solve→scatter block.
 
     solver(theta0, center, x, y, idx) -> (theta, mean_loss), vmapped
@@ -268,10 +270,19 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
     ``masked_solver`` (pad-to-max with masked loss); a uniform spec
     statically selects the unmasked ``solver`` and reproduces the
     rectangular block bit for bit.
+
+    With ``fused`` (flat-layout ADMM only) the post-solve commit — z
+    assembly plus the three scatters — runs as one fused
+    gather→ADMM→scatter pass (``kernels.fused_gss``): the Pallas
+    megakernel when ``use_fused_kernel``, its bit-identical jnp form
+    otherwise.  The reference three-pass path stays the parity oracle.
     """
     masked = ragged is not None and not ragged.uniform
     if masked and masked_solver is None:
         raise ValueError("non-uniform ragged compaction needs masked_solver")
+    if fused and not is_admm:
+        raise ValueError("fused commit is the ADMM dual algebra — "
+                         "non-ADMM compaction has no λ/z streams to fuse")
 
     def solve_slots(theta0_rows, center_rows, x, y, keys_rows,
                     off_rows, size_rows):
@@ -311,11 +322,14 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
         lam_rows = gather_rows(lam, plan.idx)
 
         if is_admm:
-            if use_admm_kernel:
+            if use_admm_kernel and not fused:
                 from repro.kernels import ops
                 lam_new_rows, center_rows = ops.admm_update(
                     th_rows, lam_rows, omega, with_z=False)
             else:
+                # The fused path re-derives λ⁺ inside the commit kernel
+                # — the pre-solve pass stays jnp (the solver only needs
+                # the center), so one round launches ONE state kernel.
                 from repro.core.engine import dual_ascent, prox_center
                 lam_new_rows = dual_ascent(lam_rows, th_rows, omega)
                 center_rows = prox_center(omega, lam_new_rows)
@@ -339,13 +353,25 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
         th_out_rows, losses = solve_slots(
             theta0_rows, center_rows, x_slots, y_slots,
             gather_rows(keys, plan.idx), off_rows, size_rows)
-        z_rows = (jax.tree.map(jnp.add, th_out_rows, lam_new_rows)
-                  if is_admm else th_out_rows)
-
-        theta_new = scatter_rows(theta, th_out_rows, plan.idx, plan.valid)
-        z_new = scatter_rows(z_prev, z_rows, plan.idx, plan.valid)
-        lam_new = (scatter_rows(lam, lam_new_rows, plan.idx, plan.valid)
-                   if is_admm else lam)
+        if fused:
+            # One pass over the state instead of three: the fused op
+            # re-derives λ⁺ from the gathered θ/λ rows (bit-identical
+            # _kernel3 op order — λ is unchanged since the pre-solve
+            # pass), assembles z = θ_out + λ⁺ in VMEM, and scatters all
+            # three outputs in place on their aliased input buffers.
+            from repro.kernels import ops
+            op = ops.fused_gss if use_fused_kernel else ops.fused_gss_ref
+            theta_new, lam_new, z_new = op(
+                plan.idx, plan.valid, th_out_rows, omega, theta, lam,
+                z_prev, with_z=True)
+        else:
+            z_rows = (jax.tree.map(jnp.add, th_out_rows, lam_new_rows)
+                      if is_admm else th_out_rows)
+            theta_new = scatter_rows(theta, th_out_rows, plan.idx,
+                                     plan.valid)
+            z_new = scatter_rows(z_prev, z_rows, plan.idx, plan.valid)
+            lam_new = (scatter_rows(lam, lam_new_rows, plan.idx,
+                                    plan.valid) if is_admm else lam)
         return (theta_new, lam_new, z_new, queue.age, queue.load,
                 plan.committed, losses, plan.valid,
                 plan.limit.reshape((1,)))
@@ -355,6 +381,8 @@ def make_compact_block(solver: Callable, epoch_fn: Callable, capacity: int,
     block.static_info = {"capacity": capacity, "c_min": c_min,
                          "adaptive": adaptive, "is_admm": is_admm,
                          "use_admm_kernel": use_admm_kernel,
+                         "fused": fused,
+                         "use_fused_kernel": use_fused_kernel,
                          "ragged": ragged is not None}
     return block
 

@@ -147,6 +147,13 @@ class FLConfig:
     #                               explicit opt-in, None → auto (TPU)
     use_admm_kernel: bool | None = False  # fused λ⁺/center Pallas pass
     #            (flat layout only); explicit opt-in, None → auto (TPU)
+    fused_gss: bool | None = False  # fused gather→ADMM→scatter commit on
+    #            the compacted flat ADMM round (kernels/fused_gss.py):
+    #            one pass over the (N, D) state instead of three.  The
+    #            Pallas megakernel runs when ``use_admm_kernel`` also
+    #            resolves on; otherwise the bit-identical jnp form
+    #            carries the same fused dataflow.  Explicit opt-in,
+    #            None → auto (TPU); ignored on dense rounds.
     compact: bool = False  # capacity-bounded compaction (core/compact.py)
     capacity_slack: float = 1.5  # C = ⌈slack·L̄·N⌉ solver rows per round
     capacity: int | None = None  # explicit global solver-row budget
@@ -459,6 +466,15 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
     epoch_fn = partial(_epoch_indices, n_points=n_points,
                        batch_size=cfg.batch_size, epochs=cfg.epochs)
 
+    fused = cfg.compact and is_admm and flat \
+        and _resolve_kernel_flag(cfg.fused_gss)
+    if cfg.fused_gss and not fused:
+        raise ValueError(
+            "fused_gss=True needs compact=True, an ADMM-family "
+            "algorithm and the flat (spec=) layout — got "
+            f"compact={cfg.compact}, algorithm={cfg.algorithm!r}, "
+            f"flat={flat}")
+
     if cfg.compact:
         n_shards = mesh.shape[client_axis] if mesh is not None else 1
         c_min, cap = capacity_bounds(n, cfg.participation,
@@ -473,7 +489,10 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                                    c_min=c_min, adaptive=adaptive,
                                    alpha=_ctrl_cfg(cfg).alpha,
                                    ragged=ragged,
-                                   masked_solver=masked_solver)
+                                   masked_solver=masked_solver,
+                                   fused=fused,
+                                   use_fused_kernel=(fused
+                                                     and use_admm_kernel))
         if mesh is not None:
             block = shard_mapped_block(block, mesh, axis=client_axis,
                                        ragged=ragged is not None)
@@ -529,6 +548,88 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                           jnp.int32) if bucket.padded else None))
             for bucket in ragged.buckets)
 
+    # Shard-local bucket tables (dense ragged path under a mesh).
+    # Bucket members interleave across the client axis, so a global
+    # (θ, center)[members] gather crosses shard boundaries and SPMD
+    # lowers it to 2·N·D·4 B of all-reduce per round (tracecheck, PR 6).
+    # Instead each shard gets its OWN member table — per-shard local
+    # row indices padded to the max local bucket population, shipped as
+    # client-axis-sharded runtime operands so shard_map hands every
+    # device its slice — and the bucket gathers/scatters never leave
+    # the device.  Padded lanes clamp to local row 0 (always in
+    # bounds), solve discarded work, and drop out of the scatter.
+    if ragged is not None and mesh is not None:
+        _n_shards = mesh.shape[client_axis]
+        _n_local = n // _n_shards
+        _local_tables = []
+        for bucket in ragged.buckets:
+            per_shard: list = [[] for _ in range(_n_shards)]
+            for m in bucket.members:
+                per_shard[m // _n_local].append(m % _n_local)
+            cap_b = max(1, max(len(p) for p in per_shard))
+            lmem = np.zeros((_n_shards, cap_b), np.int32)
+            lval = np.zeros((_n_shards, cap_b), bool)
+            for s, p in enumerate(per_shard):
+                lmem[s, : len(p)] = p
+                lval[s, : len(p)] = True
+            _local_tables.append((jnp.asarray(lmem.reshape(-1)),
+                                  jnp.asarray(lval.reshape(-1))))
+        _local_tables = tuple(_local_tables)
+
+        def _sharded_ragged_solve(theta_init, center, keys):
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            def body(theta_init, center, keys, offsets, sizes, x, y,
+                     tables):
+                n_loc = keys.shape[0]
+                theta_out = theta_init
+                losses = jnp.zeros((n_loc,), jnp.float32)
+                for (bucket, *_), (lmem, lval) in zip(_bucket_consts,
+                                                      tables, strict=True):
+                    rows = jax.tree.map(lambda a, m=lmem: a[m],
+                                        (theta_init, center))
+                    offs = offsets[lmem]
+                    bucket_epochs = partial(_epoch_indices,
+                                            n_points=bucket.capacity,
+                                            batch_size=cfg.batch_size,
+                                            epochs=cfg.epochs)
+                    idx_v = jax.vmap(bucket_epochs)(keys[lmem])
+
+                    # Materialize each lane's CSR block as one
+                    # contiguous slice (never ``take(pool, offset+idx)``
+                    # inside the scan — that form miscompiles under
+                    # shard_map on this jax; see core/compact.py).
+                    def slice_rows(buf, o_=offs, ln=bucket.capacity):
+                        return jax.vmap(
+                            lambda o: jax.lax.dynamic_slice_in_dim(
+                                buf, o, ln, 0))(o_)
+
+                    x_rows, y_rows = slice_rows(x), slice_rows(y)
+                    if bucket.padded:
+                        th, ls = jax.vmap(masked_solver)(
+                            rows[0], rows[1], x_rows, y_rows,
+                            jnp.zeros_like(offs), sizes[lmem], idx_v)
+                    else:
+                        th, ls = jax.vmap(solver)(
+                            rows[0], rows[1], x_rows, y_rows, idx_v)
+                    drop = jnp.where(lval, lmem, n_loc)
+                    theta_out = jax.tree.map(
+                        lambda acc, r, d=drop: acc.at[d].set(
+                            r.astype(acc.dtype), mode="drop"),
+                        theta_out, th)
+                    losses = losses.at[drop].set(ls, mode="drop")
+                return theta_out, losses
+
+            c, r = P(client_axis), P()
+            mapped = shard_map(
+                body, mesh=mesh,
+                in_specs=(c, c, c, c, c, r, r, c),
+                out_specs=(c, c), check_rep=False)
+            return mapped(theta_init, center, keys,
+                          ragged.offsets_array(), ragged.sizes_array(),
+                          data["x"], data["y"], _local_tables)
+
     def ragged_dense_update(state, events, data_rng):
         """All-N solve over pooled CSR data, one vmap per size bucket.
 
@@ -543,6 +644,17 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                          if cfg.warm_start else state.theta)
         center = pin(center)
         keys = jax.random.split(data_rng, n)
+        if mesh is not None:
+            # Per-shard bucket solves: same per-client computation
+            # (row, center, key, CSR slice all identical), gathered
+            # through shard-local member tables under shard_map — the
+            # only collective in the round stays the consensus mean.
+            theta_out, losses = _sharded_ragged_solve(theta_init,
+                                                      center, keys)
+            theta_out = pin(theta_out)
+            z_new = (jax.tree.map(jnp.add, theta_out, lam_new)
+                     if is_admm else theta_out)
+            return theta_out, lam_new, z_new, losses
         theta_out = theta_init  # every row overwritten below
         losses = jnp.zeros((n,), jnp.float32)
         for bucket, mem, offs, szs in _bucket_consts:

@@ -1,0 +1,184 @@
+"""Pallas TPU megakernel: fused gather → ADMM commit → scatter.
+
+The compacted round (``core/compact.py``) commits a solve by touching
+the (N, D) client state three separate times: gather θ/λ rows for the
+dual algebra, assemble z = θ_out + λ⁺, then three drop-indexed scatters
+write θ/λ/z_prev back.  Each pass is a full HBM round-trip over the
+touched rows, and XLA will not fuse a gather with a scatter across the
+solve boundary.  This kernel collapses the post-solve commit into ONE
+pass: a per-slot grid whose BlockSpec index maps consume the
+``CompactPlan`` slot indices directly (scalar-prefetch operands), so
+for capacity slot i the pipeline
+
+    * gathers θ[idx[i]], λ[idx[i]] (and z_prev[idx[i]]) into VMEM,
+    * recomputes λ⁺ = λ + θ − ω and z = θ_solved + λ⁺ in registers —
+      the exact ``_kernel3``/``_kernel2`` expressions of
+      ``kernels/admm_update.py``, same op order, bit-identical fp32 —
+    * and scatters all outputs back to row idx[i] in place
+      (``input_output_aliases`` pins each state output onto its input
+      buffer, so an un-planned row is never copied and a masked
+      ``plan.valid`` lane writes its own gathered row back unchanged).
+
+Solver HBM traffic drops from the three-pass reference's ~10 streams
+over the C committed rows to 7 (``fused_gss_hbm_bytes``).  Plan indices
+are distinct by construction (a ``jnp.lexsort`` permutation prefix), so
+masked write-back never races a genuine commit.
+
+``fused_gss_ref`` is the jnp three-pass form of the *same* expression
+graph — gather, ``λ + θ − ω``, drop-indexed scatters — kept as the
+bit-exact parity oracle and as the execution path on backends where
+interpret-mode Pallas is slower than XLA fusion (CPU CI).
+
+VMEM budget per grid step: 7 blocks of (1, block_d) fp32 plus the
+(block_d,) ω tile — 8·block_d·4 B ≈ 4 KiB at block_d=128, far under
+the ~16 MiB VMEM ceiling; block_d rounds D up to the 128-lane register
+width and stays ≤ 1024 so wide models pipeline over the d grid axis.
+
+On CPU the kernel executes under ``interpret=True`` (the exact TPU
+program, validated bit-for-bit against ``fused_gss_ref`` in
+tests/test_fused_gss.py); on real hardware pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def fused_gss_hbm_bytes(rows: int, dim: int, *, with_z: bool = True,
+                        presolve: bool = False,
+                        dtype_bytes: int = 4) -> int:
+    """Modeled HBM traffic of one fused commit over ``rows`` slots.
+
+    Kernel streams: reads θ/λ (+ z_prev) gathered rows and the solved
+    (C, D) buffer, one (amortized) ω tile, writes one row per output —
+    7 streams with z, 5 without, each ``rows·dim`` elements.  With
+    ``presolve=True`` the round-level pre-solve λ⁺/center pass (2 row
+    reads + 1 center write + ω) is added, giving the full fused compact
+    round's solver-state model: 10·rows·dim + 2·dim elements.  Compare
+    ``admm_update_hbm_bytes`` + 3 separate scatter passes for the
+    unfused reference.
+    """
+    n_stream = 7 if with_z else 5
+    total = n_stream * rows * dim + dim
+    if presolve:
+        total += 3 * rows * dim + dim
+    return dtype_bytes * total
+
+
+def _fused_gss3(idx_ref, vm_ref, s_ref, w_ref, th_ref, la_ref, z_ref,
+                tho_ref, lao_ref, zo_ref):
+    # One capacity slot per grid row: th/la/z blocks arrive gathered
+    # from row idx[i] by the BlockSpec index maps; an invalid lane
+    # writes its gathered rows back unchanged (aliased outputs make
+    # that a no-op commit, never a clobber).
+    v = vm_ref[pl.program_id(0)] != 0
+    th = th_ref[...]
+    la = la_ref[...]
+    w = w_ref[...][None, :]
+    lam_new = la + th - w  # _kernel3 op order — bit-identical λ⁺
+    z = s_ref[...] + lam_new
+    tho_ref[...] = jnp.where(v, s_ref[...], th)
+    lao_ref[...] = jnp.where(v, lam_new, la)
+    zo_ref[...] = jnp.where(v, z, z_ref[...])
+
+
+def _fused_gss2(idx_ref, vm_ref, s_ref, w_ref, th_ref, la_ref,
+                tho_ref, lao_ref):
+    v = vm_ref[pl.program_id(0)] != 0
+    th = th_ref[...]
+    la = la_ref[...]
+    w = w_ref[...][None, :]
+    lam_new = la + th - w
+    tho_ref[...] = jnp.where(v, s_ref[...], th)
+    lao_ref[...] = jnp.where(v, lam_new, la)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret",
+                                             "with_z"))
+def fused_gss(idx, valid, solved, omega, theta, lam, z_prev=None, *,
+              block_d: int = 1024, interpret: bool = True,
+              with_z: bool = True):
+    """Fused commit: scatter ``solved`` + ADMM duals into (N, D) state.
+
+    idx: (C,) int32 plan slot → state row (distinct rows); valid: (C,)
+    bool commit mask; solved: (C, D) post-solve θ rows; omega: (D,);
+    theta/lam/z_prev: (N, D) state.  Returns (θ', λ', z') — or
+    (θ', λ') with ``with_z=False`` — where row idx[i] of each output
+    holds the committed update when valid[i] and the untouched input
+    row otherwise.
+
+    Outputs alias the state inputs (``input_output_aliases``), so under
+    a donating jit the scatter is a true in-place update — no (N, D)
+    copy — whenever D is already a multiple of the 128-lane width
+    (otherwise a one-off pad copy re-layouts the state).
+    """
+    if with_z and z_prev is None:
+        raise ValueError("with_z=True needs z_prev")
+    n, d = theta.shape
+    c = idx.shape[0]
+    dp = d + (-d % 128)  # lane-align; keep blocks ≤ block_d
+    block_d = min(block_d, dp)
+    if dp != d:
+        pad2 = ((0, 0), (0, dp - d))
+        solved = jnp.pad(solved, pad2)
+        theta = jnp.pad(theta, pad2)
+        lam = jnp.pad(lam, pad2)
+        omega = jnp.pad(omega, (0, dp - d))
+        if with_z:
+            z_prev = jnp.pad(z_prev, pad2)
+
+    vmask = valid.astype(jnp.int32)
+    row = pl.BlockSpec((1, block_d), lambda i, j, idx, vm: (idx[i], j))
+    slot = pl.BlockSpec((1, block_d), lambda i, j, idx, vm: (i, j))
+    wtile = pl.BlockSpec((block_d,), lambda i, j, idx, vm: (j,))
+    n_out = 3 if with_z else 2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(c, dp // block_d),
+        in_specs=[slot, wtile] + [row] * n_out,
+        out_specs=[row] * n_out,
+    )
+    operands = (idx.astype(jnp.int32), vmask, solved, omega, theta, lam)
+    if with_z:
+        operands += (z_prev,)
+    outs = pl.pallas_call(
+        _fused_gss3 if with_z else _fused_gss2,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n, dp), theta.dtype)] * n_out,
+        # alias positions count the scalar-prefetch operands: state
+        # inputs sit at 4/5/6 of (idx, vmask, solved, ω, θ, λ[, z]).
+        input_output_aliases={4 + k: k for k in range(n_out)},
+        interpret=interpret,
+    )(*operands)
+    if dp != d:
+        outs = [o[:, :d] for o in outs]
+    return tuple(outs)
+
+
+def fused_gss_ref(idx, valid, solved, omega, theta, lam, z_prev=None, *,
+                  with_z: bool = True):
+    """jnp three-pass reference: the kernel's exact expression graph.
+
+    Gathers θ/λ rows, recomputes λ⁺ with the ``_kernel3`` op order, and
+    commits through drop-indexed scatters (invalid lanes route to an
+    out-of-bounds row, same no-op semantics as the kernel's masked
+    write-back).  Bit-identical to :func:`fused_gss` on every lane.
+    """
+    if with_z and z_prev is None:
+        raise ValueError("with_z=True needs z_prev")
+    n = theta.shape[0]
+    th_rows = theta[idx]
+    la_rows = lam[idx]
+    lam_new = la_rows + th_rows - omega[None, :]
+    drop = jnp.where(valid, idx, n)
+    tho = theta.at[drop].set(solved.astype(theta.dtype), mode="drop")
+    lao = lam.at[drop].set(lam_new.astype(lam.dtype), mode="drop")
+    if not with_z:
+        return tho, lao
+    z_rows = solved + lam_new
+    zo = z_prev.at[drop].set(z_rows.astype(z_prev.dtype), mode="drop")
+    return tho, lao, zo

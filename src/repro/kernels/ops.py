@@ -21,6 +21,11 @@ from .admm_update import (
     admm_update_sharded as _admm_update_sharded,
 )
 from .flash_attention import flash_attention as _flash_attention
+from .fused_gss import (
+    fused_gss as _fused_gss,
+    fused_gss_hbm_bytes,  # noqa: F401  (re-export: traffic model)
+    fused_gss_ref,  # noqa: F401  (re-export: bit-exact jnp form)
+)
 from .ssd_scan import ssd_scan as _ssd_scan
 from .trigger_norms import (
     trigger_sq_norms as _trigger_sq_norms,
@@ -51,6 +56,20 @@ def admm_update(theta, lam, omega, *, interpret: bool | None = None,
                                     interpret=interpret, with_z=with_z)
     return _admm_update(theta, lam, omega, interpret=interpret,
                         with_z=with_z)
+
+
+def fused_gss(idx, valid, solved, omega, theta, lam, z_prev=None, *,
+              interpret: bool | None = None, with_z: bool = True):
+    """Fused gather→ADMM-commit→scatter over the compact plan's slots.
+
+    One Pallas pass replaces the compact round's post-solve commit
+    (row gathers for the dual algebra + z assembly + three drop-indexed
+    scatters); outputs alias the (N, D) state inputs so the scatter is
+    in place.  ``fused_gss_ref`` is the bit-identical jnp form.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused_gss(idx, valid, solved, omega, theta, lam, z_prev,
+                      interpret=interpret, with_z=with_z)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0,

@@ -67,7 +67,8 @@ def roofline_terms(cost: dict[str, Any], hlo_text: str, *,
 
 def fedback_round_hbm_bytes(n_clients: int, solver_rows: int, dim: int,
                             *, data_bytes_per_client: int = 0,
-                            dtype_bytes: int = 4) -> dict[str, int]:
+                            dtype_bytes: int = 4,
+                            fused: bool = False) -> dict[str, int]:
     """Modeled per-round HBM traffic of the flat FedBack round engine.
 
     The server side is irreducibly O(N·D): one trigger read of z_prev,
@@ -82,15 +83,31 @@ def fedback_round_hbm_bytes(n_clients: int, solver_rows: int, dim: int,
     * the gathered data shards (``data_bytes_per_client`` per row) —
       the solver streams C rows of x/y, not N.
 
+    With ``fused=True`` (the fused gather→ADMM→scatter commit,
+    ``kernels.fused_gss``) the solver-state term is the honest fused
+    model instead: the pre-solve center pass plus ONE kernel pass that
+    gathers θ/λ/z_prev rows, re-derives λ⁺ and z, and scatters in
+    place (``fused_gss_hbm_bytes(..., presolve=True)``) — the separate
+    z assembly and per-output scatter passes are gone.  The dense
+    path's model is unchanged (dense rounds never gather or scatter,
+    so the historical 4+3-stream formula is exact there).
+
     Returns the separate server/solver terms plus the total, so the
     benchmark can show the solver term scaling with C while the server
     term stays pinned at N.
     """
     server = (1 + 1 + 3) * n_clients * dim * dtype_bytes
-    from repro.kernels.admm_update import admm_update_hbm_bytes
-    solver_state = (admm_update_hbm_bytes(solver_rows, dim, with_z=False,
-                                          dtype_bytes=dtype_bytes)
-                    + 3 * solver_rows * dim * dtype_bytes)
+    if fused:
+        from repro.kernels.fused_gss import fused_gss_hbm_bytes
+        solver_state = fused_gss_hbm_bytes(solver_rows, dim, with_z=True,
+                                           presolve=True,
+                                           dtype_bytes=dtype_bytes)
+    else:
+        from repro.kernels.admm_update import admm_update_hbm_bytes
+        solver_state = (admm_update_hbm_bytes(solver_rows, dim,
+                                              with_z=False,
+                                              dtype_bytes=dtype_bytes)
+                        + 3 * solver_rows * dim * dtype_bytes)
     solver_data = solver_rows * data_bytes_per_client
     return {
         "server_bytes": server,

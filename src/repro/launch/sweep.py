@@ -177,6 +177,11 @@ def main():
     ap.add_argument("--slack", type=float, default=1.5,
                     help="capacity slack bound (adaptive limit lives in "
                          "[⌈L̄·N⌉, ⌈slack·L̄·N⌉])")
+    ap.add_argument("--fused-gss", action="store_true",
+                    help="fused gather→ADMM→scatter commit on the "
+                         "compacted round (kernels/fused_gss.py): one "
+                         "pass over the (N, D) state instead of three; "
+                         "needs --compact and the flat layout")
     ap.add_argument("--max-staleness", type=int, default=None,
                     help="stale-tolerant rounds: serviced solves land up "
                          "to this many rounds later (deterministic "
@@ -201,6 +206,7 @@ def main():
                    participation=args.participation, rho=1.0, lr=0.1,
                    momentum=0.0, epochs=2, batch_size=8,
                    compact=args.compact, capacity_slack=args.slack,
+                   fused_gss=args.fused_gss,
                    max_staleness=args.max_staleness,
                    controller=ControllerConfig(K=0.2, alpha=0.9))
     data, params0, loss_fn = make_least_squares(args.n_clients)

@@ -298,6 +298,40 @@ def jaxpr_eqn_counts(jaxpr) -> dict:
     return dict(counts)
 
 
+def jaxpr_pallas_kernel_names(jaxpr) -> dict:
+    """Kernel-function-name → count over every ``pallas_call`` equation.
+
+    Recurses like :func:`jaxpr_eqn_counts`; the name comes from the
+    equation's ``name_and_src_info`` param (the kernel body's python
+    function name, e.g. ``_kernel3`` / ``_fused_gss3``), so rules can
+    budget *which* kernels a round launches, not just how many.
+    Unnamed pallas calls count under ``"<unknown>"``.
+    """
+    from collections import Counter
+
+    counts: Counter = Counter()
+
+    def visit_param(v):
+        if hasattr(v, "eqns"):
+            visit(v)
+        elif hasattr(v, "jaxpr"):
+            visit(v.jaxpr)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                visit_param(item)
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                info = eqn.params.get("name_and_src_info")
+                counts[getattr(info, "name", None) or "<unknown>"] += 1
+            for v in eqn.params.values():
+                visit_param(v)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return dict(counts)
+
+
 def jaxpr_dtypes(jaxpr) -> set:
     """Set of output dtype names over all equations (recursive).
 

@@ -31,6 +31,7 @@ from repro.analysis.rules import DtypeBan, evaluate
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 DENSE_FLAT = ConfigKey("dense", "flat", "sync", "uniform", 1)
+COMPACT_FLAT = ConfigKey("compact", "flat", "sync", "uniform", 1)
 
 
 def failing_rules(art):
@@ -85,6 +86,22 @@ class TestSeededMutations:
                              cfg_overrides={"use_admm_kernel": False})
         assert failing_rules(art) == ["fused-admm-pass",
                                       "no-full-width-sweeps"]
+
+    def test_unfused_compact_commit(self):
+        # Un-fusing the compacted commit (fused_gss=False) silently
+        # reverts to the three-pass gather/z-assembly/scatter dataflow —
+        # numerically identical, so only the fused-admm-pass budget can
+        # catch it: the compact policy expects exactly one fused-commit
+        # pallas_call and zero separate admm passes.
+        art = build_artifact(COMPACT_FLAT, compile=False,
+                             cfg_overrides={"fused_gss": False})
+        assert failing_rules(art) == ["fused-admm-pass"]
+
+    def test_unmutated_fused_compact_round_green(self):
+        # The policy default (compact-flat ⇒ fused commit) itself must
+        # trace green, or the mutation above proves nothing.
+        art = build_artifact(COMPACT_FLAT, compile=False)
+        assert failing_rules(art) == []
 
     def test_f64_leak(self):
         with jax.experimental.enable_x64():
