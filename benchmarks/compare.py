@@ -1,11 +1,13 @@
 """Bench-regression gate: diff fresh benchmark artifacts against the
 committed baselines.
 
-The perf trajectory of the round engine is tracked by two
+The perf trajectory of the round engine is tracked by three
 machine-readable artifacts — ``BENCH_round.json`` (round wall-clock,
-solver rows, modeled HBM split, async overlap) and ``BENCH_kernels.json``
-(per-kernel µs + modeled traffic).  This module is the CI gate that
-keeps them honest:
+solver rows, modeled HBM split, async overlap), ``BENCH_kernels.json``
+(per-kernel µs + modeled traffic) and ``BENCH_serve.json`` (the
+rounds-as-a-service scheduler: p50/p99 admission→commit latency and
+sustained commits/sec under a bursty trace, plus the degenerate-trace
+parity flag).  This module is the CI gate that keeps them honest:
 
 * **wall-clock** — any section's ``per_round_us`` regressing more than
   ``--tolerance`` (default 15%) against the committed baseline fails;
@@ -22,7 +24,12 @@ keeps them honest:
   staleness-0 pipeline tracking the synchronous engine) must hold;
 * **fused commit** — ``compact_fused.fused_parity_bitexact`` (the fused
   gather→ADMM→scatter commit tracking the three-pass reference bit for
-  bit) and ``compact_fused.roofline_within_15pct`` must hold.
+  bit) and ``compact_fused.roofline_within_15pct`` must hold;
+* **serving** — ``serve_parity.serve_parity_bitexact`` (degenerate
+  trace ≡ sync engine) and ``serve_bursty.conservation_ok`` gate
+  unconditionally; tick-denominated p50/p99 latencies are
+  deterministic and may never increase; µs latencies and commits/sec
+  gate under the env-fingerprint guard.
 
 Wall-clock legs only run when the fresh artifacts carry the same
 ``_env`` fingerprint (jax version / backend / machine) as the
@@ -54,6 +61,7 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
 ROUND_JSON = "BENCH_round.json"
 KERNELS_JSON = "BENCH_kernels.json"
+SERVE_JSON = "BENCH_serve.json"
 
 #: BENCH_round.json sections every report must carry, with the keys the
 #: gate reads from each.  Extra sections/keys are always allowed — the
@@ -76,6 +84,23 @@ ROUND_SCHEMA = {
     "async_parity": ("s0_matches_sync_compact",),
     "sweep": ("steady_us",),
 }
+
+
+#: BENCH_serve.json sections/keys the serving-engine gate reads
+#: (benchmarks/serve_bench.py emits them; see docs/serving.md).
+SERVE_SCHEMA = {
+    "serve_bursty": ("p50_latency_ticks", "p99_latency_ticks",
+                     "p50_latency_us", "p99_latency_us",
+                     "commits_per_sec", "ticks_per_sec",
+                     "admitted_total", "commits_total",
+                     "conservation_ok"),
+    "serve_parity": ("serve_parity_bitexact",),
+}
+
+#: Wall-clock serve keys (env-fingerprint-guarded, tolerance-compared:
+#: lower is better for latency, higher is better for throughput).
+SERVE_LATENCY_KEYS = ("p50_latency_us", "p99_latency_us")
+SERVE_THROUGHPUT_KEYS = ("commits_per_sec", "ticks_per_sec")
 
 
 class Gate:
@@ -134,6 +159,86 @@ def check_round_schema(report: dict, gate: Gate, *, label: str) -> None:
                           f"got {val}")
     if not gate.failures:
         gate.ok(f"{label}: schema ({len(ROUND_SCHEMA)} sections)")
+
+
+def check_serve_schema(report: dict, gate: Gate, *, label: str) -> None:
+    before = len(gate.failures)
+    for section, keys in SERVE_SCHEMA.items():
+        entry = report.get(section)
+        if not isinstance(entry, dict):
+            gate.fail(f"{label}: section '{section}' missing")
+            continue
+        for key in keys:
+            val = entry.get(key)
+            if isinstance(val, bool):
+                continue  # parity/conservation flags
+            if not isinstance(val, numbers.Real):
+                gate.fail(f"{label}: {section}.{key} missing or "
+                          f"non-numeric ({val!r})")
+            elif val < 0:
+                gate.fail(f"{label}: {section}.{key} must be "
+                          f"non-negative, got {val}")
+    if len(gate.failures) == before:
+        gate.ok(f"{label}: schema ({len(SERVE_SCHEMA)} sections)")
+
+
+def compare_serve(base: dict, fresh: dict, gate: Gate, *,
+                  tolerance: float, wallclock: bool = True) -> None:
+    """Gate the serving engine: parity and conservation flags are
+    deterministic and gate unconditionally; p50/p99 latency and
+    sustained commits/sec only on a matching env fingerprint."""
+    parity = fresh.get("serve_parity", {})
+    if parity.get("serve_parity_bitexact") is not True:
+        gate.fail("serve: serve_parity.serve_parity_bitexact is not "
+                  "true — the degenerate trace no longer reproduces "
+                  "the synchronous round engine")
+    else:
+        gate.ok("serve: degenerate trace reproduces the sync engine "
+                "bit for bit (events AND fp32 ω)")
+    bursty = fresh.get("serve_bursty", {})
+    if bursty.get("conservation_ok") is not True:
+        gate.fail("serve: serve_bursty.conservation_ok is not true "
+                  "(admitted − commits != deferred + in-flight)")
+    else:
+        gate.ok("serve: bursty trace conserves admissions")
+    base_bursty = base.get("serve_bursty", {})
+    # Tick-denominated latencies are deterministic per seed/config —
+    # any increase over the baseline is a scheduler regression.
+    for key in ("p50_latency_ticks", "p99_latency_ticks"):
+        b, f = base_bursty.get(key), bursty.get(key)
+        if not isinstance(b, numbers.Real):
+            continue
+        if not isinstance(f, numbers.Real):
+            gate.fail(f"serve: serve_bursty.{key} missing fresh")
+        elif f > b:
+            gate.fail(f"serve: {key} increased {b} -> {f} ticks "
+                      "(deterministic; any increase fails)")
+        else:
+            gate.ok(f"serve: {key} {f} <= {b} ticks")
+    if not wallclock:
+        return
+    for key in SERVE_LATENCY_KEYS:
+        b, f = base_bursty.get(key), bursty.get(key)
+        if isinstance(b, numbers.Real) and b > 0:
+            if not isinstance(f, numbers.Real):
+                gate.fail(f"serve: serve_bursty.{key} missing fresh")
+            elif f > b * (1.0 + tolerance):
+                gate.fail(f"serve: {key} regressed {f / b - 1.0:+.1%} "
+                          f"({b:.0f} -> {f:.0f} us, tol "
+                          f"{tolerance:.0%})")
+            else:
+                gate.ok(f"serve: {key} {f / b - 1.0:+.1%}")
+    for key in SERVE_THROUGHPUT_KEYS:
+        b, f = base_bursty.get(key), bursty.get(key)
+        if isinstance(b, numbers.Real) and b > 0:
+            if not isinstance(f, numbers.Real):
+                gate.fail(f"serve: serve_bursty.{key} missing fresh")
+            elif f < b * (1.0 - tolerance):
+                gate.fail(f"serve: {key} regressed {f / b - 1.0:+.1%} "
+                          f"({b:.0f} -> {f:.0f} /s, tol "
+                          f"{tolerance:.0%})")
+            else:
+                gate.ok(f"serve: {key} {f / b - 1.0:+.1%}")
 
 
 def check_kernels_schema(report: dict, gate: Gate, *, label: str) -> None:
@@ -317,10 +422,14 @@ def main(argv=None) -> int:
                        required=True)
     base_kernels = _load(os.path.join(args.baseline_dir, KERNELS_JSON),
                          gate, required=True)
+    base_serve = _load(os.path.join(args.baseline_dir, SERVE_JSON), gate,
+                       required=True)
     if base_round is not None:
         check_round_schema(base_round, gate, label="baseline round")
     if base_kernels is not None:
         check_kernels_schema(base_kernels, gate, label="baseline kernels")
+    if base_serve is not None:
+        check_serve_schema(base_serve, gate, label="baseline serve")
 
     if not args.schema_only:
         fresh_round = _load(os.path.join(args.fresh_dir, ROUND_JSON), gate,
@@ -341,6 +450,15 @@ def main(argv=None) -> int:
                                 base_kernels, fresh_kernels, gate,
                                 label="kernels",
                                 force=args.force_wallclock))
+        fresh_serve = _load(os.path.join(args.fresh_dir, SERVE_JSON), gate,
+                            required=True)
+        if base_serve is not None and fresh_serve is not None:
+            check_serve_schema(fresh_serve, gate, label="fresh serve")
+            compare_serve(base_serve, fresh_serve, gate,
+                          tolerance=args.tolerance,
+                          wallclock=wallclock_comparable(
+                              base_serve, fresh_serve, gate,
+                              label="serve", force=args.force_wallclock))
 
     return gate.report()
 

@@ -40,7 +40,7 @@ class ConfigKey:
 
     path: str     # "dense" | "compact"
     layout: str   # "flat" | "tree"
-    timing: str   # "sync" | "async"
+    timing: str   # "sync" | "async" | "serve"
     shards: str   # "uniform" | "ragged"
     devices: int = 1
 
@@ -59,22 +59,26 @@ def _matrix(devices=(1, 2)) -> tuple:
     return tuple(
         ConfigKey(path, layout, timing, shards, dev)
         for path, layout, timing, shards, dev in itertools.product(
-            ("dense", "compact"), ("flat", "tree"), ("sync", "async"),
-            ("uniform", "ragged"), devices))
+            ("dense", "compact"), ("flat", "tree"),
+            ("sync", "async", "serve"), ("uniform", "ragged"), devices))
 
 
-#: All 32 supported configurations (nightly).
+#: All 48 supported configurations (nightly).  ``timing="serve"`` is
+#: the admission step of the rounds-as-a-service scheduler
+#: (``core.schedule``): the same round program taking the tick's (N,)
+#: bool arrival mask as a runtime operand.
 FULL_MATRIX = _matrix()
 
 #: PR-gate subset: the canonical fused round, the compacted round, the
 #: kitchen sink (compact+async+ragged), the tree layout (pallas-free
-#: budget), and the two-device legs that exercise collectives/donation
-#: under the mesh.
+#: budget), the serve admission step, and the two-device legs that
+#: exercise collectives/donation under the mesh.
 FAST_MATRIX = (
     ConfigKey("dense", "flat", "sync", "uniform", 1),
     ConfigKey("compact", "flat", "sync", "uniform", 1),
     ConfigKey("compact", "flat", "async", "ragged", 1),
     ConfigKey("dense", "tree", "sync", "uniform", 1),
+    ConfigKey("compact", "flat", "serve", "uniform", 1),
     ConfigKey("dense", "flat", "sync", "uniform", 2),
     ConfigKey("compact", "flat", "async", "ragged", 2),
 )
@@ -181,10 +185,16 @@ def build_artifact(key: ConfigKey, *, n: int = DEFAULT_N,
     mesh = _client_mesh(key.devices) if key.devices > 1 else None
     state = init_state(cfg, params0, mesh=mesh, spec=spec)
 
+    serve = key.timing == "serve"
     common: dict = dict(mesh=mesh, spec=spec, ragged=ragged,
+                        arrivals_arg=serve,
                         body_transform=body_transform)
+    # The serve step takes the tick's arrival mask as a runtime
+    # operand; any representative (N,) bool aval traces it.
+    example_args = ((state, jax.numpy.ones((n,), bool)) if serve
+                    else (state,))
     traced = make_round_fn(cfg, loss_fn, data, jit=False, **common)
-    jaxpr = jax.make_jaxpr(traced)(state)
+    jaxpr = jax.make_jaxpr(traced)(*example_args)
 
     compiled_text = None
     cost: dict = {}
@@ -192,7 +202,7 @@ def build_artifact(key: ConfigKey, *, n: int = DEFAULT_N,
     if compile:
         round_fn = make_round_fn(cfg, loss_fn, data, jit=True,
                                  donate=donate, **common)
-        compiled = round_fn.lower(state).compile()
+        compiled = round_fn.lower(*example_args).compile()
         compiled_text = compiled.as_text()
         cost = cost_analysis_dict(compiled.cost_analysis())
 

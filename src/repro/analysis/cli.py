@@ -34,6 +34,7 @@ _ensure_host_devices()
 from repro.analysis import astlint  # noqa: E402
 from repro.analysis.artifacts import MATRICES, build_artifact  # noqa: E402
 from repro.analysis.retrace import (  # noqa: E402
+    run_serve_trace_check,
     run_single_trace_check,
     run_transfer_guard_check,
 )
@@ -91,7 +92,8 @@ def run_matrix(matrix_name: str, *, execute: bool = True,
             for v in r.violations:
                 log(f"  {r.rule}: {v}")
     if execute:
-        for check in (run_single_trace_check, run_transfer_guard_check):
+        for check in (run_single_trace_check, run_serve_trace_check,
+                      run_transfer_guard_check):
             res = check()
             report["exec"][res.rule] = res.to_json()
             log(f"exec {res.rule}: {res.status}")

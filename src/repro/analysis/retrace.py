@@ -81,6 +81,45 @@ def run_single_trace_check(key: ConfigKey | None = None, *, n: int = 16,
                    {"traces": sentry.traces, "rounds": calls})
 
 
+def run_serve_trace_check(key: ConfigKey | None = None, *, n: int = 16,
+                          n_points: int = 8, dim: int = 8,
+                          ticks: int = 6,
+                          shape_mutation: bool = False) -> RuleResult:
+    """Drain a varying arrival trace through the serve step; the round
+    must trace exactly once — arrival masks are runtime values, so the
+    whole trace runs through one compiled admission program
+    (``core.schedule`` relies on this for sustained commits/sec).
+
+    ``shape_mutation=True`` is the seeded violation: alternating ticks
+    feed the arrival mask as int32 instead of bool, changing the aval
+    and forcing a retrace.
+    """
+    key = key or ConfigKey("compact", "flat", "serve", "uniform", 1)
+    data, params0, loss_fn, spec, ragged = build_problem(
+        key, n=n, n_points=n_points, dim=dim)
+    cfg = build_config(key, n=n)
+    sentry = TraceSentry()
+    round_fn = make_round_fn(cfg, loss_fn, data, jit=True, donate=False,
+                             arrivals_arg=True, spec=spec, ragged=ragged,
+                             body_transform=sentry.transform)
+    state = init_state(cfg, params0, spec=spec)
+    rng = jax.random.PRNGKey(17)
+    calls = 0
+    for t in range(ticks):
+        rng, sub = jax.random.split(rng)
+        arrivals = jax.random.bernoulli(sub, 0.5, (n,))
+        if shape_mutation and t % 2:
+            arrivals = arrivals.astype(jnp.int32)  # new aval
+        state, _metrics = round_fn(state, arrivals)
+        calls += 1
+    jax.block_until_ready(state)
+    violations = [] if sentry.traces == 1 else [
+        f"{key.name}: {sentry.traces} traces over {calls} ticks "
+        f"(arrival masks are runtime values and must not retrace)"]
+    return _result("serve-single-trace", violations,
+                   {"traces": sentry.traces, "ticks": calls})
+
+
 def run_transfer_guard_check(key: ConfigKey | None = None, *,
                              n: int = 16, n_points: int = 8,
                              dim: int = 8,

@@ -4,6 +4,18 @@ Stores arbitrary pytrees (FLState included: server ω, stacked client
 θ/λ/z_prev, controller state, PRNG key) with structure round-tripping
 via flattened key paths.  Atomic write (tmp + rename); ``step``-suffixed
 files with ``latest_checkpoint`` discovery.
+
+Dtypes round-trip exactly, including the extended ml_dtypes family
+(bf16 client state): ``np.savez`` serializes bfloat16 as a raw 2-byte
+void dtype, so the writer records every leaf's true dtype in a
+``__dtypes__`` sidecar and the loader re-views the bytes before any
+comparison.  ``load_checkpoint`` then *casts* to the template leaf's
+dtype when the kinds are compatible (float→float covers bf16↔fp32
+resume, int→int, exact bool/uint) and raises on genuinely incompatible
+kinds — restoring a float row into an int32 queue age is corruption,
+not a cast.  The stored treedef is verified against the template up
+front, so a structure mismatch is a clear error instead of an opaque
+missing-leaf ``KeyError``.
 """
 from __future__ import annotations
 
@@ -36,6 +48,14 @@ def _part(p) -> str:
     raise TypeError(f"unsupported key path entry {p!r}")
 
 
+def _json_blob(obj) -> np.ndarray:
+    return np.frombuffer(json.dumps(obj).encode(), dtype=np.uint8)
+
+
+def _read_blob(arr) -> object:
+    return json.loads(np.asarray(arr).tobytes().decode())
+
+
 def save_checkpoint(directory: str, step: int, tree, *, prefix="ckpt") -> str:
     """Serialize `tree` to `<directory>/<prefix>_<step>.npz` atomically."""
     os.makedirs(directory, exist_ok=True)
@@ -46,8 +66,11 @@ def save_checkpoint(directory: str, step: int, tree, *, prefix="ckpt") -> str:
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, __treedef__=np.frombuffer(
-                json.dumps(str(treedef)).encode(), dtype=np.uint8), **flat)
+            np.savez(f,
+                     __treedef__=_json_blob(str(treedef)),
+                     __dtypes__=_json_blob(
+                         {k: str(v.dtype) for k, v in flat.items()}),
+                     **flat)
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
@@ -55,10 +78,53 @@ def save_checkpoint(directory: str, step: int, tree, *, prefix="ckpt") -> str:
     return path
 
 
+_META_KEYS = ("__treedef__", "__dtypes__")
+
+
+def _compatible_cast(arr: np.ndarray, key: str, want) -> np.ndarray:
+    """``arr`` cast to the template dtype ``want``; loud on a kind clash.
+
+    Compatibility is by dtype *kind* through jax's extended lattice
+    (so bfloat16 — numpy kind 'V' — still counts as floating): both
+    floating, both signed-integer, or both unsigned-integer casts are
+    value-preserving resumes; everything else (float↔int, bool↔number,
+    ...) is state corruption and raises.
+    """
+    import jax.numpy as jnp
+
+    want = np.dtype(want)
+    if arr.dtype == want:
+        return arr
+    for lattice_kind in (jnp.floating, jnp.signedinteger,
+                         jnp.unsignedinteger):
+        if jnp.issubdtype(arr.dtype, lattice_kind) \
+                and jnp.issubdtype(want, lattice_kind):
+            return arr.astype(want)
+    raise ValueError(
+        f"incompatible dtype for {key}: checkpoint {arr.dtype} cannot "
+        f"restore into a {want} leaf (only floating→floating and "
+        f"matching-signedness integer casts are allowed)")
+
+
 def load_checkpoint(path: str, like):
-    """Restore into the structure of `like` (a template pytree)."""
+    """Restore into the structure of `like` (a template pytree).
+
+    Leaves come back *in the template's dtype* (a bf16 checkpoint
+    restores into a bf16 template unchanged, and resumes into an fp32
+    template via an explicit cast); a checkpoint whose tree structure
+    differs from ``like`` fails fast with both structures spelled out.
+    """
     with np.load(path) as zf:
-        flat = {k: zf[k] for k in zf.files if k != "__treedef__"}
+        stored_treedef = (_read_blob(zf["__treedef__"])
+                          if "__treedef__" in zf.files else None)
+        stored_dtypes = (_read_blob(zf["__dtypes__"])
+                         if "__dtypes__" in zf.files else {})
+        flat = {k: zf[k] for k in zf.files if k not in _META_KEYS}
+    like_treedef = str(jax.tree_util.tree_structure(like))
+    if stored_treedef is not None and stored_treedef != like_treedef:
+        raise ValueError(
+            f"checkpoint structure mismatch:\n  stored   "
+            f"{stored_treedef}\n  template {like_treedef}")
     leaves_like = jax.tree_util.tree_flatten_with_path(like)[0]
     out = []
     for keypath, leaf in leaves_like:
@@ -66,9 +132,16 @@ def load_checkpoint(path: str, like):
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = flat[key]
+        stored = stored_dtypes.get(key)
+        if stored is not None and str(arr.dtype) != stored:
+            # np.savez round-trips extended dtypes (bfloat16, ...) as
+            # raw void bytes; re-view them as what was written.
+            arr = arr.view(np.dtype(stored))
         if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
+        if hasattr(leaf, "dtype"):
+            arr = _compatible_cast(arr, key, leaf.dtype)
         out.append(arr)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), out)

@@ -38,6 +38,14 @@ from .fedback import (  # noqa: F401
     make_round_fn,
     run_rounds,
 )
+from .schedule import (  # noqa: F401
+    ServeReport,
+    TraceConfig,
+    make_trace,
+    run_trace,
+    serve,
+    sync_trace,
+)
 from .state import (  # noqa: F401
     DeferQueue,
     FLState,

@@ -353,7 +353,8 @@ def _trigger(cfg: FLConfig, state: FLState, mesh, client_axis):
 def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                   *, jit: bool = True, mesh=None,
                   client_axis: str = "clients", donate: bool | None = None,
-                  ctrl_arg: bool = False, spec: FlatSpec | None = None,
+                  ctrl_arg: bool = False, arrivals_arg: bool = False,
+                  spec: FlatSpec | None = None,
                   ragged: RaggedSpec | None = None,
                   body_transform: Callable | None = None):
     """Build the per-round step.
@@ -376,6 +377,22 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             ``ctrl_overrides`` is a dict of runtime controller-gain
             overrides (e.g. ``{"K": k, "target_rate": r}``) — the hook
             the batched sweep runner vmaps over.
+    arrivals_arg: build ``round_fn(state, arrivals)`` instead (the
+            serve step, ``repro.core.schedule``): ``arrivals`` is an
+            (N,) bool *runtime* operand marking the clients whose
+            updates reached the server this tick.  Fresh selection
+            events are gated to arrived clients — the open-loop
+            k-subset strategies draw among arrivals, the feedback
+            trigger is masked and its integral law self-corrects —
+            while plan eligibility is untouched, so demand already in
+            the DeferQueue keeps being served whether or not the
+            client re-arrives.  Arrival masks vary per call without
+            retracing (one jitted program across the whole trace);
+            with ``arrivals = ones(N)`` every tick, the step
+            reproduces the plain round engine bit for bit — events
+            AND fp32 ω (the degenerate-trace parity the serve tests
+            pin).  Composes with ``ctrl_arg`` as
+            ``round_fn(state, ctrl_overrides, arrivals)``.
     spec:   flat-layout codec (``repro.utils.flatstate.FlatSpec``); the
             state must come from ``init_state(..., spec=spec)``.  The
             given ``loss_fn`` still takes the model pytree — it is
@@ -700,7 +717,7 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             args += (ragged_offsets, ragged_sizes)
         return block(*args)
 
-    def round_body(state: FLState, ctrl_overrides):
+    def round_body(state: FLState, ctrl_overrides, arrivals=None):
         rng, sel_rng, data_rng = jax.random.split(state.rng, 3)
 
         # --- server: trigger distances + selection --------------------
@@ -710,10 +727,21 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
             # until its payload lands (one outstanding solve per client).
             inflight = state.inflight
             eligible = inflight.ttl == 0
+            admit = eligible if arrivals is None else eligible & arrivals
             events = select.decide(sel_rng, state, distances,
                                    ctrl_overrides,
-                                   eligible=eligible) & eligible
+                                   eligible=admit) & admit
             ctrl = None  # stepped below on commit-time measurements
+        elif arrivals is not None:
+            # Serve step: fresh events only from this tick's arrivals.
+            # Plan eligibility stays all-ones — deferred demand is
+            # served whether or not the client re-arrives (a queued
+            # client's work must never be dropped by a quiet tick).
+            eligible = jnp.ones((n,), bool)
+            events = select.decide(sel_rng, state, distances,
+                                   ctrl_overrides,
+                                   eligible=arrivals) & arrivals
+            ctrl = select.measure(state.ctrl, events, ctrl_overrides)
         else:
             eligible = jnp.ones((n,), bool)
             events, ctrl = select(sel_rng, state, distances,
@@ -807,14 +835,21 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
                             / (rate_floor if rate_floor > 0 else 1.0)),
             num_inflight=num_inflight,
             num_landed=num_landed,
+            committed=committed,
         )
         new_state = FLState(theta=theta, lam=lam, z_prev=z_prev, omega=omega,
                             ctrl=ctrl, rng=rng, round=state.round + 1,
                             queue=queue, inflight=new_inflight)
         return new_state, metrics
 
-    if ctrl_arg:
+    if ctrl_arg and arrivals_arg:
         round_fn = round_body
+    elif ctrl_arg:
+        def round_fn(state, ctrl_overrides):
+            return round_body(state, ctrl_overrides)
+    elif arrivals_arg:
+        def round_fn(state, arrivals):
+            return round_body(state, None, arrivals)
     else:
         def round_fn(state):
             return round_body(state, None)
@@ -834,9 +869,14 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
     if mesh is None:
         return jax.jit(round_fn, donate_argnums=donate_argnums)
 
+    from jax.sharding import NamedSharding, PartitionSpec
     state_sh = fl_state_shardings(mesh, axis=client_axis)
     metrics_sh = round_metrics_shardings(mesh, axis=client_axis)
-    in_sh = (state_sh, None) if ctrl_arg else (state_sh,)
+    in_sh: tuple = (state_sh,)
+    if ctrl_arg:
+        in_sh += (None,)
+    if arrivals_arg:
+        in_sh += (NamedSharding(mesh, PartitionSpec(client_axis)),)
     return jax.jit(round_fn, in_shardings=in_sh,
                    out_shardings=(state_sh, metrics_sh),
                    donate_argnums=donate_argnums)

@@ -41,6 +41,7 @@ their own.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -114,6 +115,20 @@ def _first_k_eligible(order_rank, eligible, k):
     return (pos < k) & eligible
 
 
+def subset_size(rate: float, n: int) -> int:
+    """k = max(⌊L̄·N⌋, 1) — the paper's k-subset cardinality.
+
+    ``round`` (the old code) applied banker's rounding, so 0.25·10 → 2
+    but 0.35·10 → 4 and 0.45·10 → 4: inconsistent across rates and off
+    the spec.  Plain ``floor`` has its own trap: 0.29·100 is
+    28.999999999999996 in binary, so ``floor(rate*n)`` would drop an
+    exactly-representable product by one — the epsilon absorbs that
+    representation error (any real mis-specification is ≫ 1e-9·n away
+    from an integer).
+    """
+    return max(math.floor(rate * n + 1e-9), 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class FedBackSelection(_SelectionBase):
     controller: ControllerConfig
@@ -144,7 +159,7 @@ class RandomSelection(_SelectionBase):
     def decide(self, rng, state, distances, ctrl_overrides=None,
                eligible=None):
         n = state.ctrl.delta.shape[0]
-        k = max(int(round(self.rate * n)), 1)
+        k = subset_size(self.rate, n)
         perm = jax.random.permutation(rng, n)
         rank = jnp.zeros((n,), jnp.int32).at[perm].set(
             jnp.arange(n, dtype=jnp.int32))
@@ -196,7 +211,7 @@ class RoundRobinSelection(_SelectionBase):
     def decide(self, rng, state, distances, ctrl_overrides=None,
                eligible=None):
         n = state.ctrl.delta.shape[0]
-        k = max(int(round(self.rate * n)), 1)
+        k = subset_size(self.rate, n)
         start = (state.round * k) % n
         cyclic = (jnp.arange(n, dtype=jnp.int32) - start) % n
         return _first_k_eligible(cyclic, eligible, k)

@@ -168,3 +168,9 @@ class RoundMetrics(NamedTuple):
     #                           round (0 on the synchronous engine)
     num_landed: Any = None  # () int32 — delayed solves that committed
     #                         this round (0 on the synchronous engine)
+    committed: Any = None  # (N,) bool — clients whose θ/λ/z_prev rows
+    #                        committed this round (= events on the dense
+    #                        synchronous path; serviced rows under
+    #                        compaction; direct|landed under staleness).
+    #                        The serve loop (core/schedule.py) pairs this
+    #                        against admissions for per-commit latency.

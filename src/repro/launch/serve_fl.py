@@ -1,0 +1,107 @@
+"""FL serving launcher: rounds-as-a-service over an arrival trace.
+
+Drives the event-driven scheduler (``repro.core.schedule``) over a
+generated client-arrival trace: updates are admitted into free
+capacity slots the tick they arrive (no round barrier — the
+``CompactPlan`` + ``DeferQueue`` machinery absorbs overflow), the
+consensus mean ticks every tick over the freshest z-rows, and the
+host loop records per-commit latency into a :class:`ServeReport`.
+
+    PYTHONPATH=src python -m repro.launch.serve_fl --trace bursty \\
+        --n-clients 256 --ticks 96 --rate 0.25 --json BENCH_serve.json
+
+``--trace sync`` (everyone fires every tick) reproduces the
+synchronous round engine bit for bit — the parity anchor
+(tests/test_serve.py).  The LM inference demo lives at
+``repro.launch.serve_lm``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def build_serve_problem(n_clients: int, *, dim: int = 16,
+                        n_points: int = 8, seed: int = 0,
+                        algorithm: str = "fedback",
+                        participation: float = 0.25,
+                        compact: bool = True,
+                        max_staleness: int | None = None,
+                        adaptive_capacity: bool = True,
+                        fused_gss: bool | None = False):
+    """(cfg, round_fn, state) for a flat-layout serve run on the
+    synthetic least-squares problem — shared by the launcher, the
+    serve benchmark and the tests."""
+    from repro.core.fedback import FLConfig, init_state, make_round_fn
+    from repro.data.synthetic import make_least_squares
+    from repro.utils.flatstate import make_flat_spec
+
+    data, params0, loss_fn = make_least_squares(
+        n_clients, n_points=n_points, dim=dim, seed=seed)
+    spec = make_flat_spec(params0)
+    cfg = FLConfig(
+        algorithm=algorithm, n_clients=n_clients,
+        participation=participation, rho=1.0, lr=0.1, momentum=0.0,
+        epochs=1, batch_size=4, compact=compact,
+        max_staleness=max_staleness,
+        adaptive_capacity=adaptive_capacity, fused_gss=fused_gss,
+        seed=seed)
+    round_fn = make_round_fn(cfg, loss_fn, data, spec=spec,
+                             arrivals_arg=True)
+    state = init_state(cfg, params0, spec=spec)
+    return cfg, round_fn, state
+
+
+def main(argv=None) -> int:
+    from repro.core.schedule import TRACE_KINDS, TraceConfig, make_trace, \
+        serve
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", choices=TRACE_KINDS, default="bursty")
+    ap.add_argument("--n-clients", type=int, default=256)
+    ap.add_argument("--ticks", type=int, default=96)
+    ap.add_argument("--rate", type=float, default=0.25,
+                    help="mean per-tick arrival probability (and the "
+                         "controller's target rate L̄)")
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--algorithm", default="fedback")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense rounds (default: capacity-bounded "
+                         "compaction)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="bounded-staleness commit pipeline (default: "
+                         "synchronous commits)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the ServeReport summary here")
+    args = ap.parse_args(argv)
+
+    cfg, round_fn, state = build_serve_problem(
+        args.n_clients, dim=args.dim, seed=args.seed,
+        algorithm=args.algorithm, participation=args.rate,
+        compact=not args.dense, max_staleness=args.max_staleness)
+    trace = make_trace(TraceConfig(
+        kind=args.trace, n_clients=args.n_clients, ticks=args.ticks,
+        rate=args.rate, seed=args.seed))
+    state, report = serve(round_fn, state, trace, warmup=True)
+
+    summary = report.summary()
+    print(f"serve[{args.trace}] N={args.n_clients} ticks={args.ticks} "
+          f"rate={args.rate} compact={cfg.compact} "
+          f"staleness={cfg.max_staleness}")
+    for k, v in summary.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+    if not report.conservation_ok:
+        print("  WARNING: conservation violated (admitted − commits != "
+              "deferred + in-flight)")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({f"serve_{args.trace}": summary}, fh, indent=2,
+                      sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+    return 0 if report.conservation_ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

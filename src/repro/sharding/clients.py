@@ -98,7 +98,7 @@ def round_metrics_shardings(mesh: Mesh, *, axis: str = CLIENT_AXIS,
     return RoundMetrics(events=c, num_events=r, distances=c, delta=c,
                         load=c, train_loss=r, num_deferred=r,
                         realized_capacity=r, realized_slack=r,
-                        num_inflight=r, num_landed=r)
+                        num_inflight=r, num_landed=r, committed=c)
 
 
 def client_data_shardings(mesh: Mesh, data, *, axis: str = CLIENT_AXIS):

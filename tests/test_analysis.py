@@ -285,7 +285,9 @@ class TestRuleEngineJaxpr:
         assert by_rule["collective-budget"].status == "skip"
 
     def test_matrices_are_consistent(self):
-        assert len(FULL_MATRIX) == 32
+        assert len(FULL_MATRIX) == 48  # {dense,compact}×{flat,tree}×
+        #                                {sync,async,serve}×{uniform,
+        #                                ragged}×{1,2}d
         assert set(FAST_MATRIX) <= set(FULL_MATRIX)
         names = [k.name for k in FULL_MATRIX]
         assert len(names) == len(set(names))

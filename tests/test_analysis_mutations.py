@@ -132,6 +132,18 @@ class TestRetraceSentry:
         assert res.status == "fail"
         assert res.metrics["traces"] > 1
 
+    def test_serve_arrival_masks_do_not_retrace(self):
+        from repro.analysis.retrace import run_serve_trace_check
+        res = run_serve_trace_check()
+        assert res.status == "pass", res.violations
+        assert res.metrics["traces"] == 1
+
+    def test_serve_aval_mutation_forces_retrace(self):
+        from repro.analysis.retrace import run_serve_trace_check
+        res = run_serve_trace_check(shape_mutation=True)
+        assert res.status == "fail"
+        assert res.metrics["traces"] > 1
+
 
 _REPLICATE_SCRIPT = """
 import os

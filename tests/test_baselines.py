@@ -64,6 +64,52 @@ class TestSelectionStrategies:
             assert int(ev.sum()) == 5
 
 
+class TestSubsetSize:
+    """Regression grid for the k = ⌊rate·n⌋ cardinality rule.
+
+    The old ``int(round(rate * n))`` went through banker's rounding,
+    so half-integer products drew a cohort whose size depended on the
+    *parity* of the neighbouring integer — 0.35·10 → 4 but 0.45·10
+    → 4, 0.55·10 → 6 — and rates strictly below the next integer
+    could still round up (0.15·10 → 2).  ``subset_size`` floors (with
+    a 1-ulp nudge for products like 0.29·100 = 28.999…96 that land
+    just below the integer in binary) and clamps to ≥ 1.  The grid
+    pins the floor semantics, with the round-vs-floor disagreements
+    called out.
+    """
+
+    @pytest.mark.parametrize("rate,n,expected", [
+        (0.35, 10, 3),    # round() gave 4 (3.5 → even 4)
+        (0.55, 10, 5),    # round() gave 6 (5.5 → even 6)
+        (0.15, 10, 1),    # round() gave 2
+        (0.1, 16, 1),     # round() gave 2 (1.6 rounds up)
+        (0.25, 10, 2),    # 2.5 → even 2: round happened to agree
+        (0.45, 10, 4),    # 4.5 → even 4: round happened to agree
+        (0.1, 5, 1),      # floor(0.5) = 0 → clamped to 1
+        (0.29, 100, 29),  # 28.999…96 in binary — the epsilon case
+        (0.3, 10, 3),     # exact product, both agree
+        (0.5, 10, 5),
+        (0.25, 16, 4),
+        (1.0, 7, 7),
+        (0.01, 8, 1),     # floor(0.08) = 0 → clamped to 1
+        (0.75, 4, 3),
+    ])
+    def test_rate_grid_pins_k(self, rate, n, expected):
+        from repro.core.selection import subset_size
+        assert subset_size(rate, n) == expected
+
+    @pytest.mark.parametrize("name", ["random", "round_robin"])
+    def test_strategies_draw_floor_cardinality(self, name):
+        """The half-integer product that exposed the bug: rate 0.35 on
+        n=10 must select 3, not round()'s 4."""
+        sel = make_selection(name, rate=0.35,
+                             controller=ControllerConfig(target_rate=0.35))
+        cfg = FLConfig(n_clients=10)
+        state = init_state(cfg, {"w": jnp.zeros((3,))})
+        ev, _ = sel(jax.random.PRNGKey(0), state, jnp.zeros((10,)))
+        assert int(ev.sum()) == 3
+
+
 class TestScaffold:
     def test_converges_on_iid_quadratic(self):
         rng = np.random.default_rng(0)

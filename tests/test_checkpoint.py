@@ -1,5 +1,15 @@
-"""Checkpoint store round-trips full federated state."""
+"""Checkpoint store round-trips full federated state.
+
+The dtype layer is pinned explicitly: ``np.savez`` serializes the
+ml_dtypes family (bfloat16) as raw void bytes, so without the
+``__dtypes__`` sidecar a bf16 client state silently round-trips as
+garbage.  bf16 and mixed-dtype trees must restore exactly, a bf16
+checkpoint must resume into an fp32 template via a cast (and vice
+versa), and genuinely incompatible kinds (float row into an int32
+queue age) must be rejected loudly instead of corrupting state.
+"""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -38,3 +48,100 @@ class TestStore:
             omega=init_mlp(jax.random.PRNGKey(1), 16, 9, 4))
         with pytest.raises(ValueError):
             load_checkpoint(path, bad)
+
+
+class TestDtypes:
+    """The ``__dtypes__`` sidecar: extended dtypes round-trip exactly,
+    kind-compatible casts resume, kind clashes fail loudly."""
+
+    def _mixed_tree(self):
+        rng = np.random.default_rng(0)
+        return {
+            "theta_bf16": jnp.asarray(rng.normal(size=(4, 3)),
+                                      jnp.bfloat16),
+            "omega_f32": jnp.asarray(rng.normal(size=(3,)), jnp.float32),
+            "age_i32": jnp.asarray([0, 2, 5, 1], jnp.int32),
+            "mask_bool": jnp.asarray([True, False, True]),
+            "count_u32": jnp.asarray([7, 9], jnp.uint32),
+        }
+
+    def test_bf16_and_mixed_dtype_roundtrip_exact(self, tmp_path):
+        tree = self._mixed_tree()
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        restored = load_checkpoint(path, tree)
+        for key in tree:
+            a, b = np.asarray(tree[key]), np.asarray(restored[key])
+            assert a.dtype == b.dtype, key
+            np.testing.assert_array_equal(
+                a.view(np.uint8), b.view(np.uint8),
+                err_msg=f"{key} did not round-trip bit-exactly")
+
+    def test_bf16_checkpoint_resumes_into_f32_template(self, tmp_path):
+        tree = {"w": jnp.asarray([1.5, -2.25, 0.125], jnp.bfloat16)}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        restored = load_checkpoint(
+            path, {"w": jnp.zeros((3,), jnp.float32)})
+        assert np.asarray(restored["w"]).dtype == np.float32
+        # bf16 → f32 widening is exact
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      [1.5, -2.25, 0.125])
+
+    def test_f32_checkpoint_resumes_into_bf16_template(self, tmp_path):
+        tree = {"w": jnp.asarray([1.5, -2.25], jnp.float32)}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        restored = load_checkpoint(
+            path, {"w": jnp.zeros((2,), jnp.bfloat16)})
+        assert np.asarray(restored["w"]).dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"], np.float32), [1.5, -2.25])
+
+    def test_matching_signedness_int_cast_is_allowed(self, tmp_path):
+        tree = {"age": jnp.asarray([1, 2, 3], jnp.int32)}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        restored = load_checkpoint(
+            path, {"age": jnp.zeros((3,), jnp.int64)})
+        np.testing.assert_array_equal(np.asarray(restored["age"]),
+                                      [1, 2, 3])
+
+    @pytest.mark.parametrize("stored,template", [
+        (np.float32, np.int32),    # float row into a queue age
+        (np.int32, np.float32),    # int counter into a weight row
+        (np.int32, np.uint32),     # signedness flip
+        (np.bool_, np.int32),      # mask into a counter
+    ])
+    def test_incompatible_kind_is_rejected_loudly(self, tmp_path, stored,
+                                                  template):
+        tree = {"leaf": jnp.zeros((2,), stored)}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        with pytest.raises(ValueError, match="incompatible dtype"):
+            load_checkpoint(path, {"leaf": jnp.zeros((2,), template)})
+
+    def test_bf16_into_int_template_is_rejected(self, tmp_path):
+        tree = {"leaf": jnp.zeros((2,), jnp.bfloat16)}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        with pytest.raises(ValueError, match="incompatible dtype"):
+            load_checkpoint(path, {"leaf": jnp.zeros((2,), jnp.int32)})
+
+    def test_treedef_mismatch_names_both_structures(self, tmp_path):
+        tree = {"a": jnp.zeros((2,)), "b": jnp.ones((2,))}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        with pytest.raises(ValueError,
+                           match="checkpoint structure mismatch"):
+            load_checkpoint(path, {"a": jnp.zeros((2,)),
+                                   "c": jnp.ones((2,))})
+
+    def test_bf16_flstate_roundtrip(self, tmp_path):
+        """Full FLState with bf16 client rows — the mixed-precision
+        resume scenario the sidecar exists for."""
+        cfg, state = _state()
+        state = state._replace(
+            theta=jax.tree.map(lambda x: x.astype(jnp.bfloat16),
+                               state.theta))
+        path = save_checkpoint(str(tmp_path), 1, state)
+        restored = load_checkpoint(path, state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored),
+                        strict=True):
+            a, b = np.atleast_1d(np.asarray(a)), np.atleast_1d(np.asarray(b))
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(a.view(np.uint8),
+                                          b.view(np.uint8))
