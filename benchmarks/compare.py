@@ -1,13 +1,17 @@
 """Bench-regression gate: diff fresh benchmark artifacts against the
 committed baselines.
 
-The perf trajectory of the round engine is tracked by three
+The perf trajectory of the round engine is tracked by four
 machine-readable artifacts — ``BENCH_round.json`` (round wall-clock,
 solver rows, modeled HBM split, async overlap), ``BENCH_kernels.json``
-(per-kernel µs + modeled traffic) and ``BENCH_serve.json`` (the
+(per-kernel µs + modeled traffic), ``BENCH_serve.json`` (the
 rounds-as-a-service scheduler: p50/p99 admission→commit latency and
 sustained commits/sec under a bursty trace, plus the degenerate-trace
-parity flag).  This module is the CI gate that keeps them honest:
+parity flag) and ``BENCH_comm.json`` (the compressed consensus wire:
+modeled bytes per round per ``consensus_compress`` mode and
+rounds-to-target under compression × participation rate; see
+``benchmarks/comm_bench.py``).  This module is the CI gate that keeps
+them honest:
 
 * **wall-clock** — any section's ``per_round_us`` regressing more than
   ``--tolerance`` (default 15%) against the committed baseline fails;
@@ -29,7 +33,13 @@ parity flag).  This module is the CI gate that keeps them honest:
   trace ≡ sync engine) and ``serve_bursty.conservation_ok`` gate
   unconditionally; tick-denominated p50/p99 latencies are
   deterministic and may never increase; µs latencies and commits/sec
-  gate under the env-fingerprint guard.
+  gate under the env-fingerprint guard;
+* **comm** — modeled consensus wire bytes are deterministic and may
+  **never increase** per mode; the int8 payload must stay ≤ 0.3× the
+  fp32 term (the acceptance ratio); every compressed leg's
+  rounds-to-target must stay within ``--comm-tolerance`` (+2 rounds
+  absolute slack) of the fp32 anchor at the same participation rate —
+  error feedback failing shows up exactly here.
 
 Wall-clock legs only run when the fresh artifacts carry the same
 ``_env`` fingerprint (jax version / backend / machine) as the
@@ -40,10 +50,10 @@ checks above still gate.  Same policy as the golden traces.
 
 Two entry modes::
 
-    python -m benchmarks.compare --schema-only   # tier-1: baselines well-formed
-    python -m benchmarks.compare                 # nightly: fresh vs baselines
+    python -m benchmarks.compare --schema-only  # tier-1: well-formed?
+    python -m benchmarks.compare                # nightly: fresh vs base
 
-The nightly ``slow-compiles`` job runs the full diff right after the
+The nightly ``nightly-bench`` job runs the full diff right after the
 benchmark artifacts are produced and uploaded; the tier-1 job runs the
 schema check so a malformed baseline commit is caught on every push
 without paying for a benchmark run.  Baselines live in
@@ -62,6 +72,7 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 ROUND_JSON = "BENCH_round.json"
 KERNELS_JSON = "BENCH_kernels.json"
 SERVE_JSON = "BENCH_serve.json"
+COMM_JSON = "BENCH_comm.json"
 
 #: BENCH_round.json sections every report must carry, with the keys the
 #: gate reads from each.  Extra sections/keys are always allowed — the
@@ -101,6 +112,23 @@ SERVE_SCHEMA = {
 #: lower is better for latency, higher is better for throughput).
 SERVE_LATENCY_KEYS = ("p50_latency_us", "p99_latency_us")
 SERVE_THROUGHPUT_KEYS = ("commits_per_sec", "ticks_per_sec")
+
+#: BENCH_comm.json sections/keys the compressed-consensus gate reads
+#: (benchmarks/comm_bench.py emits them; see docs/compression.md).
+COMM_WIRE_BYTE_KEYS = ("payload_link_bytes", "total_link_bytes",
+                       "uplink_bytes_per_client")
+COMM_CONV_RATES = (10, 25, 50)  # participation grid, in percent
+COMM_MODES = ("none", "bf16", "int8")
+COMM_SCHEMA = {
+    **{f"wire_{m}": COMM_WIRE_BYTE_KEYS for m in COMM_MODES},
+    "wire_ratio": ("int8_vs_fp32", "bf16_vs_fp32"),
+    **{f"conv_p{r}_{m}": ("rounds_to_target", "final_loss",
+                          "target_loss")
+       for r in COMM_CONV_RATES for m in COMM_MODES},
+}
+
+#: The acceptance ceiling on the int8-vs-fp32 modeled payload ratio.
+COMM_INT8_RATIO_MAX = 0.3
 
 
 class Gate:
@@ -239,6 +267,84 @@ def compare_serve(base: dict, fresh: dict, gate: Gate, *,
                           f"{tolerance:.0%})")
             else:
                 gate.ok(f"serve: {key} {f / b - 1.0:+.1%}")
+
+
+def check_comm_schema(report: dict, gate: Gate, *, label: str) -> None:
+    before = len(gate.failures)
+    for section, keys in COMM_SCHEMA.items():
+        entry = report.get(section)
+        if not isinstance(entry, dict):
+            gate.fail(f"{label}: section '{section}' missing")
+            continue
+        for key in keys:
+            val = entry.get(key)
+            if not isinstance(val, numbers.Real):
+                gate.fail(f"{label}: {section}.{key} missing or "
+                          f"non-numeric ({val!r})")
+            elif val < 0:
+                gate.fail(f"{label}: {section}.{key} must be "
+                          f"non-negative, got {val}")
+    if len(gate.failures) == before:
+        gate.ok(f"{label}: schema ({len(COMM_SCHEMA)} sections)")
+
+
+def compare_comm(base: dict, fresh: dict, gate: Gate, *,
+                 comm_tolerance: float) -> None:
+    """Gate the compressed consensus wire.  Everything here is
+    deterministic (modeled bytes and fixed-seed round counts), so no
+    env-fingerprint guard applies."""
+    # Modeled wire bytes: never-increase per mode against the baseline.
+    for mode in COMM_MODES:
+        section = f"wire_{mode}"
+        b_entry = base.get(section, {})
+        f_entry = fresh.get(section, {})
+        for key in COMM_WIRE_BYTE_KEYS:
+            b, f = b_entry.get(key), f_entry.get(key)
+            if not isinstance(b, numbers.Real):
+                continue
+            if not isinstance(f, numbers.Real):
+                gate.fail(f"comm: {section}.{key} missing fresh")
+            elif f > b:
+                gate.fail(f"comm: {section}.{key} increased {b} -> {f} "
+                          "(modeled; any increase fails)")
+            else:
+                gate.ok(f"comm: {section}.{key} {f} <= {b}")
+    # The acceptance ratio: int8 consensus payload vs the fp32 term.
+    ratio = fresh.get("wire_ratio", {}).get("int8_vs_fp32")
+    if not isinstance(ratio, numbers.Real):
+        gate.fail("comm: wire_ratio.int8_vs_fp32 missing fresh")
+    elif ratio > COMM_INT8_RATIO_MAX:
+        gate.fail(f"comm: int8 payload is {ratio:.3f}x the fp32 "
+                  f"consensus term (must be <= {COMM_INT8_RATIO_MAX})")
+    else:
+        gate.ok(f"comm: int8 payload {ratio:.3f}x fp32 <= "
+                f"{COMM_INT8_RATIO_MAX}")
+    # Convergence: every compressed leg within tolerance of the fp32
+    # anchor at the same participation rate (fresh-vs-fresh — the
+    # anchor travels with the run, so backend changes can't skew it).
+    for rate in COMM_CONV_RATES:
+        anchor = fresh.get(f"conv_p{rate}_none", {}).get(
+            "rounds_to_target")
+        if not isinstance(anchor, numbers.Real):
+            gate.fail(f"comm: conv_p{rate}_none.rounds_to_target "
+                      "missing fresh")
+            continue
+        for mode in COMM_MODES[1:]:
+            rtt = fresh.get(f"conv_p{rate}_{mode}", {}).get(
+                "rounds_to_target")
+            cap = anchor * (1.0 + comm_tolerance) + 2
+            if not isinstance(rtt, numbers.Real):
+                gate.fail(f"comm: conv_p{rate}_{mode}.rounds_to_target "
+                          "missing fresh")
+            elif rtt > cap:
+                gate.fail(
+                    f"comm: {mode} at p={rate}% needs {rtt} rounds to "
+                    f"target vs fp32 anchor {anchor} (cap {cap:.1f}) — "
+                    "error feedback is not tracking the uncompressed "
+                    "consensus")
+            else:
+                gate.ok(f"comm: p{rate}% {mode} rounds-to-target "
+                        f"{rtt} (anchor {anchor})")
 
 
 def check_kernels_schema(report: dict, gate: Gate, *, label: str) -> None:
@@ -407,6 +513,10 @@ def main(argv=None) -> int:
     ap.add_argument("--kernel-tolerance", type=float, default=0.5,
                     help="kernel microbench regression tolerance "
                          "(looser: interpret-mode CPU timings)")
+    ap.add_argument("--comm-tolerance", type=float, default=0.25,
+                    help="rounds-to-target tolerance of the compressed "
+                         "legs vs the fp32 anchor (fraction, plus 2 "
+                         "rounds absolute slack; default 0.25)")
     ap.add_argument("--schema-only", action="store_true",
                     help="validate the committed baselines' schema and "
                          "exit (no fresh artifacts needed — the fast "
@@ -424,12 +534,16 @@ def main(argv=None) -> int:
                          gate, required=True)
     base_serve = _load(os.path.join(args.baseline_dir, SERVE_JSON), gate,
                        required=True)
+    base_comm = _load(os.path.join(args.baseline_dir, COMM_JSON), gate,
+                      required=True)
     if base_round is not None:
         check_round_schema(base_round, gate, label="baseline round")
     if base_kernels is not None:
         check_kernels_schema(base_kernels, gate, label="baseline kernels")
     if base_serve is not None:
         check_serve_schema(base_serve, gate, label="baseline serve")
+    if base_comm is not None:
+        check_comm_schema(base_comm, gate, label="baseline comm")
 
     if not args.schema_only:
         fresh_round = _load(os.path.join(args.fresh_dir, ROUND_JSON), gate,
@@ -459,6 +573,12 @@ def main(argv=None) -> int:
                           wallclock=wallclock_comparable(
                               base_serve, fresh_serve, gate,
                               label="serve", force=args.force_wallclock))
+        fresh_comm = _load(os.path.join(args.fresh_dir, COMM_JSON), gate,
+                           required=True)
+        if base_comm is not None and fresh_comm is not None:
+            check_comm_schema(fresh_comm, gate, label="fresh comm")
+            compare_comm(base_comm, fresh_comm, gate,
+                         comm_tolerance=args.comm_tolerance)
 
     return gate.report()
 

@@ -43,11 +43,16 @@ class ConfigKey:
     timing: str   # "sync" | "async" | "serve"
     shards: str   # "uniform" | "ragged"
     devices: int = 1
+    compress: str = "none"  # consensus wire ("none" | "bf16" | "int8")
 
     @property
     def name(self) -> str:
-        return (f"{self.path}-{self.layout}-{self.timing}-"
+        base = (f"{self.path}-{self.layout}-{self.timing}-"
                 f"{self.shards}-{self.devices}d")
+        # Suffix only when compressing, so the pre-existing baseline
+        # keys (all uncompressed) stay stable.
+        return base if self.compress == "none" else \
+            f"{base}-{self.compress}"
 
     @property
     def kernels_on(self) -> bool:
@@ -63,11 +68,29 @@ def _matrix(devices=(1, 2)) -> tuple:
             ("sync", "async", "serve"), ("uniform", "ragged"), devices))
 
 
-#: All 48 supported configurations (nightly).  ``timing="serve"`` is
-#: the admission step of the rounds-as-a-service scheduler
+def _compress_matrix() -> tuple:
+    """Compressed-consensus legs (flat layout only — the EF residual
+    is an (N, D) matrix over the flat state)."""
+    legs = []
+    for mode in ("bf16", "int8"):
+        for path in ("dense", "compact"):
+            for dev in (1, 2):
+                legs.append(
+                    ConfigKey(path, "flat", "sync", "uniform", dev, mode))
+    # The stale-tolerant and serve paths share the same aggregation
+    # splice; one representative leg each keeps nightly wall-clock sane.
+    legs.append(ConfigKey("compact", "flat", "async", "ragged", 1, "int8"))
+    legs.append(ConfigKey("compact", "flat", "async", "ragged", 2, "int8"))
+    legs.append(ConfigKey("compact", "flat", "serve", "uniform", 1, "int8"))
+    return tuple(legs)
+
+
+#: All supported configurations (nightly): the 48-point uncompressed
+#: product plus the flat compressed-consensus legs.  ``timing="serve"``
+#: is the admission step of the rounds-as-a-service scheduler
 #: (``core.schedule``): the same round program taking the tick's (N,)
 #: bool arrival mask as a runtime operand.
-FULL_MATRIX = _matrix()
+FULL_MATRIX = _matrix() + _compress_matrix()
 
 #: PR-gate subset: the canonical fused round, the compacted round, the
 #: kitchen sink (compact+async+ragged), the tree layout (pallas-free
@@ -81,6 +104,12 @@ FAST_MATRIX = (
     ConfigKey("compact", "flat", "serve", "uniform", 1),
     ConfigKey("dense", "flat", "sync", "uniform", 2),
     ConfigKey("compact", "flat", "async", "ragged", 2),
+    # Compressed consensus: the int8 single/two-device legs (dtype-aware
+    # CollectiveBudget, s8 ring term) and the bf16 two-device leg (u16
+    # all-gather wire).
+    ConfigKey("dense", "flat", "sync", "uniform", 1, "int8"),
+    ConfigKey("dense", "flat", "sync", "uniform", 2, "int8"),
+    ConfigKey("dense", "flat", "sync", "uniform", 2, "bf16"),
 )
 
 MATRICES = {"fast": FAST_MATRIX, "full": FULL_MATRIX}
@@ -151,6 +180,7 @@ def build_config(key: ConfigKey, *, n: int = DEFAULT_N,
         # Policy (mirrored by the fused-admm-pass rule): the compacted
         # flat round commits through the fused megakernel.
         fused_gss=key.kernels_on and key.path == "compact",
+        consensus_compress=key.compress,
     )
     kw.update(overrides or {})
     return FLConfig(**kw)

@@ -37,6 +37,7 @@ PRAGMA_RE = re.compile(r"#\s*tracecheck:\s*ok\b")
 #: linted — add the entry when a new module grows jitted bodies.
 TRACED_SCOPES: dict = {
     "core/engine.py": "*",
+    "core/compress.py": "*",
     "core/trigger.py": "*",
     "core/controller.py": "*",
     "core/selection.py": "*",

@@ -43,6 +43,7 @@ from typing import Any
 
 import jax
 
+from repro.core.compress import WIRE_BYTES, block_layout
 from repro.core.state import CLIENT_STACKED_FIELDS
 from repro.utils import hlo as H
 
@@ -131,13 +132,17 @@ class FullWidthSweepBudget:
 
     The dense flat round keeps exactly one (the z = θ + λ assembly);
     the compacted round runs its algebra at capacity width C < N and
-    must keep zero.  Only meaningful where the full (N, D) shape is
+    must keep zero.  The EF-compressed consensus legitimately adds
+    four (the δ = z − ω + e carry-in and the residual/wire-error
+    fold-back are (N, D) algebra by design — every client carries a
+    residual row).  Only meaningful where the full (N, D) shape is
     visible at the jaxpr top level: flat layout, single device.
     """
 
     name: str = "no-full-width-sweeps"
     dense_budget: int = 1
     compact_budget: int = 0
+    ef_extra: int = 4  # δ carry-in (sub+add) + residual (sub) + fold (add)
     prims: tuple = ("add", "sub", "mul")
 
     def applies(self, art) -> bool:
@@ -151,6 +156,8 @@ class FullWidthSweepBudget:
         full = [s for s in shapes if tuple(s) == (art.n, art.dim)]
         budget = (self.compact_budget if art.cfg.compact
                   else self.dense_budget)
+        if getattr(art.cfg, "consensus_compress", "none") != "none":
+            budget += self.ef_extra
         violations = [] if len(full) <= budget else [
             f"{art.key.name}: {len(full)} top-level (N={art.n}, "
             f"D={art.dim}) elementwise sweeps, budget {budget}"]
@@ -255,11 +262,20 @@ class DonationAudit:
 class CollectiveBudget:
     """Per-round collective bytes against the roofline consensus term.
 
-    The round's one genuine collective is the consensus mean — a (D,)
-    all-reduce — plus the PRNG-key fold and a handful of scalar
+    The round's one genuine collective is the consensus aggregation —
+    a (D,) all-reduce — plus the PRNG-key fold and a handful of scalar
     metric reductions.  Ring model: 2 · bytes · (n−1)/n per
     all-reduce.  All-gathers are capped at a control-vector size: the
     replicated pool and the (N, D) state must never be gathered.
+
+    The budget is **dtype-aware**: under ``consensus_compress`` the
+    consensus term is priced at the wire dtype (an s8 (D,) ring term
+    for int8 — NOT fp32 — plus the tiny (nb,) fp32 shared-scale MAX
+    all-reduce), and the bf16 leg moves its payload over the u16
+    all-gather instead, so the all-reduce budget drops the consensus
+    term entirely and the all-gather cap grows by exactly that wire.
+    A compressed round that still emits an fp32-sized collective blows
+    the (much tighter) budget and turns the rule red.
     """
 
     name: str = "collective-budget"
@@ -270,10 +286,30 @@ class CollectiveBudget:
     def applies(self, art) -> bool:
         return art.world_size > 1 and art.compiled_text is not None
 
+    @staticmethod
+    def consensus_term_bytes(art) -> float:
+        """Modeled consensus z-term on the all-reduce/all-gather wire:
+        2 · (ws−1)/ws · D · wire_bytes.  The number ANALYSIS.json
+        carries for the compressed-vs-fp32 byte-ratio acceptance."""
+        ws = art.world_size
+        frac = (ws - 1) / ws
+        mode = getattr(art.cfg, "consensus_compress", "none")
+        return 2.0 * frac * art.dim * WIRE_BYTES[mode]
+
     def budget_bytes(self, art) -> float:
         ws = art.world_size
         frac = (ws - 1) / ws
-        consensus = 2.0 * frac * art.dim * 4        # (D,) f32 mean
+        mode = getattr(art.cfg, "consensus_compress", "none")
+        if mode == "bf16":
+            # The payload rides the u16 all-gather (see allgather_cap);
+            # no consensus all-reduce survives in the budget.
+            consensus = 0.0
+        elif mode == "int8":
+            nb, b = block_layout(art.dim, art.cfg.compress_block)
+            # s8 codes all-reduce (zero-padded to nb·B) + fp32 scales.
+            consensus = 2.0 * frac * (nb * b * 1 + nb * 4)
+        else:
+            consensus = 2.0 * frac * art.dim * 4    # (D,) f32 mean
         rng = 2.0 * frac * (2 * art.n * 4)          # u32 key fold
         # The dense ragged round used to add 2·N·D·4 B here: its
         # bucket gathers crossed shard boundaries and SPMD paid an
@@ -283,6 +319,14 @@ class CollectiveBudget:
         return (self.safety * (consensus + rng)
                 + self.scalar_allowance_bytes)
 
+    def allgather_cap(self, art) -> float:
+        mode = getattr(art.cfg, "consensus_compress", "none")
+        if mode == "bf16":
+            # The (ws, D) u16 gathered wire of the bf16 consensus.
+            return (self.allgather_max_bytes
+                    + art.world_size * art.dim * 2)
+        return self.allgather_max_bytes
+
     def check(self, art) -> RuleResult:
         if not self.applies(art):
             return _skip(self.name, "single device")
@@ -291,19 +335,24 @@ class CollectiveBudget:
         ar = inv.get("all-reduce", {"bytes": 0.0, "count": 0})
         ag = inv.get("all-gather", {"raw_bytes": 0.0, "count": 0})
         budget = self.budget_bytes(art)
+        ag_cap = self.allgather_cap(art)
         violations = []
         if ar["bytes"] > budget:
             violations.append(
                 f"{art.key.name}: {ar['bytes']:.0f} all-reduce link "
                 f"bytes/round exceeds budget {budget:.0f}")
-        if ag.get("raw_bytes", 0.0) > self.allgather_max_bytes:
+        if ag.get("raw_bytes", 0.0) > ag_cap:
             violations.append(
                 f"{art.key.name}: {ag['raw_bytes']:.0f} all-gather "
                 f"bytes — the replicated pool/state must not be "
-                f"gathered (max {self.allgather_max_bytes:.0f})")
+                f"gathered (max {ag_cap:.0f})")
         metrics = {k: {"count": v["count"], "bytes": round(v["bytes"], 1)}
                    for k, v in sorted(inv.items())}
         metrics["budget_bytes"] = round(budget, 1)
+        metrics["compress"] = getattr(art.cfg, "consensus_compress",
+                                      "none")
+        metrics["consensus_term_bytes"] = round(
+            self.consensus_term_bytes(art), 1)
         return _result(self.name, violations, metrics)
 
 

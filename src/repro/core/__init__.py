@@ -19,6 +19,15 @@ from .compact import (  # noqa: F401
     init_queue,
     queue_update,
 )
+from .compress import (  # noqa: F401
+    consensus_wire_bytes,
+    ef_consensus,
+    ef_participant_mean,
+    init_residual,
+    int8_dequantize,
+    int8_quantize,
+    quantize_dequantize,
+)
 from .controller import (  # noqa: F401
     ControllerConfig,
     ControllerState,

@@ -33,7 +33,8 @@ from repro.utils.pytree import tree_zeros_like
 from .controller import ControllerState
 
 #: FLState fields whose leaves carry the leading (N, ...) client axis.
-CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev", "queue", "inflight")
+CLIENT_STACKED_FIELDS = ("theta", "lam", "z_prev", "queue", "inflight",
+                         "comm")
 
 #: ControllerState fields with a per-client (N,) vector.
 CTRL_STACKED_FIELDS = ("delta", "load", "event_count")
@@ -145,6 +146,11 @@ class FLState(NamedTuple):
     #                       materialized by init_state iff
     #                       cfg.max_staleness is not None (None = the
     #                       synchronous engine, no pipeline state).
+    comm: Any = None  # (N, D) fp32 — per-client error-feedback residual
+    #                   of the compressed consensus (core/compress.py);
+    #                   materialized by init_state iff
+    #                   cfg.consensus_compress != "none" (None = the
+    #                   uncompressed wire, no residual state).
 
 
 class RoundMetrics(NamedTuple):

@@ -157,6 +157,27 @@ def fedback_ragged_round_hbm_bytes(n_clients: int, solver_rows: int,
     }
 
 
+def consensus_collective_s(dim: int, *, mode: str = "none",
+                           block: int = 256,
+                           world_size: int = 1) -> dict[str, float]:
+    """Modeled wire time of one consensus aggregation under
+    ``consensus_compress`` (the compressed collective term).
+
+    Delegates the byte model to :func:`repro.core.compress.
+    consensus_wire_bytes` — an fp32/int8 ring all-reduce at the wire
+    dtype (int8 adds the (nb,) fp32 shared-scale MAX reduce as an
+    overhead term), a u16 all-gather for bf16 — and prices it at
+    ``LINK_BW``.  The returned dict carries the byte breakdown next to
+    ``collective_s`` so BENCH_comm.json can gate bytes and the roofline
+    can stack times from the same numbers.
+    """
+    from repro.core.compress import consensus_wire_bytes
+
+    wire = consensus_wire_bytes(dim, mode=mode, block=block,
+                                world_size=world_size)
+    return {**wire, "collective_s": wire["total_link_bytes"] / LINK_BW}
+
+
 def fedback_round_memory_s(n_clients: int, solver_rows: int, dim: int,
                            *, data_bytes_per_client: int = 0,
                            dtype_bytes: int = 4) -> float:
@@ -170,7 +191,9 @@ def fedback_round_memory_s(n_clients: int, solver_rows: int, dim: int,
 def fedback_async_overlap(n_clients: int, solver_rows: int, dim: int, *,
                           max_staleness: int, n_chips: int = 1,
                           data_bytes_per_client: int = 0,
-                          dtype_bytes: int = 4) -> dict[str, float]:
+                          dtype_bytes: int = 4,
+                          compress: str = "none",
+                          compress_block: int = 256) -> dict[str, float]:
     """Modeled round-time overlap of the stale-tolerant engine.
 
     The synchronous round's critical path is serial: the solver term
@@ -186,7 +209,11 @@ def fedback_async_overlap(n_clients: int, solver_rows: int, dim: int, *,
         t_async = max(t_solver, t_server + t_collective)
 
     The collective term models the consensus all-reduce over the
-    ``clients`` mesh (ring all-reduce moves ~2·D bytes per chip).
+    ``clients`` mesh (ring all-reduce moves ~2·D bytes per chip);
+    under ``compress`` it switches to the compressed wire model
+    (:func:`consensus_collective_s`) — the uncompressed default keeps
+    the historical conservative no-(n−1)/n-discount formula so
+    committed BENCH_round baselines stay comparable.
     Returns both modeled times plus the overlap speedup — the number
     the async rows of BENCH_round.json carry next to the measured
     wall-clock, so the benchmark can show how much of the modeled
@@ -198,7 +225,14 @@ def fedback_async_overlap(n_clients: int, solver_rows: int, dim: int, *,
         dtype_bytes=dtype_bytes)
     t_solver = hbm["solver_bytes"] / HBM_BW
     t_server = hbm["server_bytes"] / HBM_BW
-    t_coll = (2.0 * dim * dtype_bytes / LINK_BW) if n_chips > 1 else 0.0
+    if n_chips <= 1:
+        t_coll = 0.0
+    elif compress == "none":
+        t_coll = 2.0 * dim * dtype_bytes / LINK_BW
+    else:
+        t_coll = consensus_collective_s(
+            dim, mode=compress, block=compress_block,
+            world_size=n_chips)["collective_s"]
     t_sync = t_solver + t_server + t_coll
     t_async = (max(t_solver, t_server + t_coll) if max_staleness > 0
                else t_sync)

@@ -188,6 +188,13 @@ def main():
                          "per-client delay schedule; 0 = async pipeline "
                          "that reproduces the synchronous engine bit for "
                          "bit; omit for the synchronous engine)")
+    ap.add_argument("--consensus-compress", default="none",
+                    choices=("none", "bf16", "int8"),
+                    help="compressed consensus wire (core/compress.py): "
+                         "clients transmit quantized z-deltas with a "
+                         "persistent error-feedback residual; 'none' is "
+                         "the exact fp32 aggregation (needs the flat "
+                         "layout when != none)")
     ap.add_argument("--ragged", action="store_true",
                     help="heterogeneous client shards: per-client sizes "
                          "drawn seed-deterministically in [n/2, n] points "
@@ -208,6 +215,7 @@ def main():
                    compact=args.compact, capacity_slack=args.slack,
                    fused_gss=args.fused_gss,
                    max_staleness=args.max_staleness,
+                   consensus_compress=args.consensus_compress,
                    controller=ControllerConfig(K=0.2, alpha=0.9))
     data, params0, loss_fn = make_least_squares(args.n_clients)
     ragged = None

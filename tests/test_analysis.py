@@ -285,9 +285,12 @@ class TestRuleEngineJaxpr:
         assert by_rule["collective-budget"].status == "skip"
 
     def test_matrices_are_consistent(self):
-        assert len(FULL_MATRIX) == 48  # {dense,compact}×{flat,tree}×
-        #                                {sync,async,serve}×{uniform,
-        #                                ragged}×{1,2}d
+        # 48 uncompressed ({dense,compact}×{flat,tree}×{sync,async,
+        # serve}×{uniform,ragged}×{1,2}d) + 11 compressed-consensus
+        # legs (analysis/artifacts._compress_matrix).
+        assert len(FULL_MATRIX) == 48 + 11
+        assert sum(k.compress != "none" for k in FULL_MATRIX) == 11
+        assert sum(k.compress != "none" for k in FAST_MATRIX) == 3
         assert set(FAST_MATRIX) <= set(FULL_MATRIX)
         names = [k.name for k in FULL_MATRIX]
         assert len(names) == len(set(names))

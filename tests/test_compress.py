@@ -1,0 +1,402 @@
+"""Compressed-consensus invariants (core/compress.py).
+
+Property layer (real hypothesis when installed, the executing
+mini-hypothesis fallback otherwise — fixed ``--hypothesis-seed`` on CI)
+plus engine-level locks:
+
+* **quantizer round-trip bounds** — int8 error ≤ half a scale step
+  (blockmax/(2·127)) per coordinate, bf16 error ≤ 2⁻⁸·|x|, zeros are
+  exact;
+* **error-feedback conservation** — at every round (hence every
+  prefix), Σ residual-change + transmitted total == Σ true deltas, for
+  both the consensus (ADMM) and the masked participant (FedAvg) forms;
+* **``compress="none"`` bit-parity** — the explicit "none" config runs
+  the identical program as the default config (no residual state, no
+  new collectives) across {dense, compact, staleness, serve} on one
+  device and, via a subprocess 2-device mesh, under the clients mesh
+  (the committed golden traces separately pin "none" ≡ the pre-feature
+  engine bit for bit; the int8 golden lives in test_golden_trace.py);
+* **EF tracking** — compressed final ω stays close to the fp32 ω on
+  the same fixed-seed run (the convergence claim the comm bench
+  gates);
+* **state plumbing** — the (N, D) residual checkpoints through the
+  dtype-sidecar store, shards client-stacked under the mesh, and the
+  tree layout is rejected loudly.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ControllerConfig, FLConfig, init_state, \
+    make_flat_spec, make_round_fn
+from repro.core.compress import (
+    block_layout,
+    check_mode,
+    consensus_wire_bytes,
+    ef_consensus,
+    ef_participant_mean,
+    init_residual,
+    int8_dequantize,
+    int8_quantize,
+    quantize_dequantize,
+)
+from repro.data import make_least_squares
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rng_mat(seed, n, d, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal((n, d))
+            .astype(np.float32) * scale)
+
+
+class TestQuantizer:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 12), d=st.integers(1, 300),
+           block=st.integers(1, 300), seed=st.integers(0, 2**31 - 1),
+           scale=st.floats(1e-3, 1e3))
+    def test_int8_roundtrip_bound(self, n, d, block, seed, scale):
+        x = _rng_mat(seed, n, d, scale)
+        codes, scales = int8_quantize(jnp.asarray(x), block=block)
+        back = np.asarray(int8_dequantize(codes, scales, d))
+        nb, b = block_layout(d, block)
+        assert codes.shape == (n, nb, b) and scales.shape == (n, nb)
+        err = np.abs(back - x)
+        pad = nb * b - d
+        xb = np.pad(x, [(0, 0), (0, pad)]).reshape(n, nb, b)
+        # Half a scale step per coordinate: blockmax/(2·127), plus a
+        # small fp32 epsilon for the scale division itself.
+        bound = (np.abs(xb).max(axis=-1, keepdims=True) / (2 * 127)
+                 * (1 + 1e-5) + 1e-7)
+        errb = np.pad(err, [(0, 0), (0, pad)]).reshape(n, nb, b)
+        assert (errb <= bound).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 8), d=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1))
+    def test_bf16_roundtrip_relative_bound(self, n, d, seed):
+        x = _rng_mat(seed, n, d)
+        back = np.asarray(quantize_dequantize(jnp.asarray(x), "bf16"))
+        # bf16 keeps 8 significant bits → relative error ≤ 2⁻⁸.
+        assert (np.abs(back - x) <= np.abs(x) * 2.0**-8 + 1e-30).all()
+
+    def test_zero_vector_is_exact_and_none_is_identity(self):
+        z = jnp.zeros((3, 40), jnp.float32)
+        codes, scales = int8_quantize(z, block=16)
+        assert not np.asarray(codes).any() and not np.asarray(scales).any()
+        assert not np.asarray(int8_dequantize(codes, scales, 40)).any()
+        x = jnp.asarray(_rng_mat(0, 2, 7))
+        assert np.array_equal(np.asarray(quantize_dequantize(x, "none")),
+                              np.asarray(x))
+
+    def test_block_layout_clamps_to_dim(self):
+        assert block_layout(16, 256) == (1, 16)
+        assert block_layout(300, 128) == (3, 128)
+        assert block_layout(5, 1) == (5, 1)
+
+    def test_check_mode_rejects_unknown(self):
+        with pytest.raises(ValueError, match="consensus_compress"):
+            check_mode("fp8")
+
+
+class TestConservation:
+    """Σ residual + Σ transmitted == Σ true deltas, at every prefix.
+
+    Per round: Σᵢ eᵢ⁺ + T == Σᵢ eᵢ + Σ_{i∈mask} (zᵢ − ω), where the
+    transmitted total T is recovered exactly as (ω⁺ − ω)·denom.
+    Holding at every round makes every prefix telescope.
+    """
+
+    @settings(max_examples=10, deadline=None)
+    @given(mode=st.sampled_from(["none", "bf16", "int8"]),
+           n=st.integers(2, 12), d=st.integers(3, 40),
+           seed=st.integers(0, 2**31 - 1))
+    def test_consensus_prefix_conservation(self, mode, n, d, seed):
+        omega = jnp.zeros((d,), jnp.float32)
+        resid = init_residual(n, d)
+        for r in range(5):
+            z = jnp.asarray(_rng_mat(seed + r, n, d))
+            omega_new, resid_new = ef_consensus(
+                z, omega, resid, mode=mode, block=8)
+            lhs = (np.asarray(resid_new, np.float64).sum(axis=0)
+                   + np.asarray(omega_new - omega, np.float64) * n)
+            rhs = (np.asarray(resid, np.float64).sum(axis=0)
+                   + np.asarray(z - omega[None, :],
+                                np.float64).sum(axis=0))
+            np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-4)
+            omega, resid = omega_new, resid_new
+
+    @settings(max_examples=10, deadline=None)
+    @given(mode=st.sampled_from(["bf16", "int8"]),
+           n=st.integers(2, 12), d=st.integers(3, 40),
+           seed=st.integers(0, 2**31 - 1))
+    def test_participant_prefix_conservation(self, mode, n, d, seed):
+        rng = np.random.default_rng(seed ^ 0xC0FFEE)
+        omega = jnp.zeros((d,), jnp.float32)
+        resid = init_residual(n, d)
+        for r in range(5):
+            z = jnp.asarray(_rng_mat(seed + r, n, d))
+            mask = rng.random(n) < 0.5
+            m = int(mask.sum())
+            omega_new, resid_new = ef_participant_mean(
+                z, jnp.asarray(mask), omega, resid,
+                jnp.int32(m), mode=mode, block=8)
+            lhs = (np.asarray(resid_new, np.float64).sum(axis=0)
+                   + np.asarray(omega_new - omega, np.float64) * max(m, 1))
+            rhs = (np.asarray(resid, np.float64).sum(axis=0)
+                   + np.asarray(z - omega[None, :],
+                                np.float64)[mask].sum(axis=0))
+            np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-4)
+            # Non-transmitters keep their residual rows untouched.
+            np.testing.assert_array_equal(
+                np.asarray(resid_new)[~mask], np.asarray(resid)[~mask])
+            omega, resid = omega_new, resid_new
+
+    def test_zero_committed_leaves_omega_and_residual(self):
+        n, d = 6, 9
+        omega = jnp.asarray(np.linspace(-1, 1, d), jnp.float32)
+        resid = jnp.asarray(_rng_mat(7, n, d) * 0.01)
+        z = jnp.asarray(_rng_mat(8, n, d))
+        o2, r2 = ef_participant_mean(
+            z, jnp.zeros((n,), bool), omega, resid, jnp.int32(0),
+            mode="int8")
+        np.testing.assert_array_equal(np.asarray(o2), np.asarray(omega))
+        np.testing.assert_array_equal(np.asarray(r2), np.asarray(resid))
+
+
+def _variant_cfgs(n):
+    base = FLConfig(algorithm="fedback", n_clients=n, participation=0.5,
+                    rho=1.0, lr=0.1, momentum=0.0, epochs=1,
+                    batch_size=4, seed=0,
+                    controller=ControllerConfig(K=0.5, alpha=0.9))
+    return {
+        "dense": base,
+        "compact": dataclasses.replace(
+            base, compact=True, participation=0.25, capacity_slack=1.5),
+        "staleness": dataclasses.replace(
+            base, compact=True, participation=0.25, capacity_slack=1.5,
+            max_staleness=2),
+        "serve": dataclasses.replace(
+            base, compact=True, participation=0.25, capacity_slack=1.5),
+    }
+
+
+def _run_variant(cfg, data, params0, loss_fn, spec, *, rounds=6,
+                 mesh=None, serve=False):
+    state = init_state(cfg, params0, spec=spec, mesh=mesh)
+    round_fn = make_round_fn(cfg, loss_fn, data, spec=spec, mesh=mesh,
+                             arrivals_arg=serve)
+    events, omegas = [], None
+    rng = np.random.default_rng(123)
+    for _ in range(rounds):
+        if serve:
+            arrivals = jnp.asarray(rng.random(cfg.n_clients) < 0.7)
+            state, m = round_fn(state, arrivals)
+        else:
+            state, m = round_fn(state)
+        events.append(np.asarray(m.events))
+    omegas = np.asarray(state.omega, np.float32)
+    return np.stack(events), omegas, state
+
+
+class TestNoneBitParity:
+    """consensus_compress="none" is the identical program as the
+    default config — no residual state, same bits — on every path."""
+
+    @pytest.mark.parametrize("variant",
+                             ["dense", "compact", "staleness", "serve"])
+    def test_single_device(self, variant):
+        n = 16
+        data, params0, loss_fn = make_least_squares(n, 8, 5)
+        spec = make_flat_spec(params0)
+        cfg = _variant_cfgs(n)[variant]
+        serve = variant == "serve"
+        ev_a, om_a, st_a = _run_variant(cfg, data, params0, loss_fn,
+                                        spec, serve=serve)
+        explicit = dataclasses.replace(cfg, consensus_compress="none")
+        ev_b, om_b, st_b = _run_variant(explicit, data, params0, loss_fn,
+                                        spec, serve=serve)
+        assert st_a.comm is None and st_b.comm is None
+        np.testing.assert_array_equal(ev_a, ev_b)
+        assert om_a.tobytes() == om_b.tobytes()
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ControllerConfig, FLConfig, init_state, \
+    make_flat_spec, make_round_fn
+from repro.core.compress import ef_consensus, init_residual
+from repro.data import make_least_squares
+from repro.sharding.clients import make_client_mesh
+
+N = 8
+data, p0, ls = make_least_squares(N, 8, 5)
+spec = make_flat_spec(p0)
+base = FLConfig(algorithm="fedback", n_clients=N, participation=0.5,
+                rho=1.0, lr=0.1, momentum=0.0, epochs=1, batch_size=4,
+                seed=0, controller=ControllerConfig(K=0.5, alpha=0.9))
+mesh = make_client_mesh(2)
+variants = {
+    "dense": base,
+    "compact": dataclasses.replace(base, compact=True,
+                                   participation=0.25,
+                                   capacity_slack=1.5),
+    "staleness": dataclasses.replace(base, compact=True,
+                                     participation=0.25,
+                                     capacity_slack=1.5,
+                                     max_staleness=2),
+}
+out = {}
+for vname, vcfg in variants.items():
+    recs = {}
+    for tag, c in (("default", vcfg),
+                   ("none", dataclasses.replace(
+                       vcfg, consensus_compress="none"))):
+        state = init_state(c, p0, spec=spec, mesh=mesh)
+        rf = make_round_fn(c, ls, data, spec=spec, mesh=mesh)
+        evs = []
+        for _ in range(6):
+            state, m = rf(state)
+            evs.append(np.asarray(m.events).astype(int).tolist())
+        recs[tag] = {"events": evs,
+                     "omega_hex": np.asarray(state.omega,
+                                             np.float32).tobytes().hex(),
+                     "comm_none": state.comm is None}
+    out[vname] = recs
+
+# int8 under the mesh: comm shards client-stacked; the round runs.
+c8 = dataclasses.replace(base, consensus_compress="int8")
+state = init_state(c8, p0, spec=spec, mesh=mesh)
+rf = make_round_fn(c8, ls, data, spec=spec, mesh=mesh)
+for _ in range(4):
+    state, m = rf(state)
+out["int8_mesh"] = {
+    "comm_shape": list(state.comm.shape),
+    "comm_sharding": str(state.comm.sharding.spec),
+    "omega_finite": bool(jnp.isfinite(state.omega).all()),
+}
+
+# Distributed EF conservation: the shard-local wire error folds back
+# into the transmitting rows' residuals across BOTH devices.
+rng = np.random.default_rng(0)
+z = jnp.asarray(rng.standard_normal((N, 12)).astype(np.float32))
+omega = jnp.zeros((12,), jnp.float32)
+resid = init_residual(N, 12)
+o2, r2 = ef_consensus(z, omega, resid, mode="int8", block=4, mesh=mesh)
+lhs = (np.asarray(r2, np.float64).sum(axis=0)
+       + np.asarray(o2 - omega, np.float64) * N)
+rhs = np.asarray(z, np.float64).sum(axis=0)
+out["mesh_conservation_max_err"] = float(np.abs(lhs - rhs).max())
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_SKIP_SUBPROCESS") == "1",
+                    reason="subprocess legs disabled")
+class TestTwoDeviceParity:
+    @pytest.fixture(scope="class")
+    def result(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             timeout=560, cwd=REPO)
+        assert out.returncode == 0, out.stderr[-3000:]
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("RESULT:")]
+        return json.loads(line[-1][len("RESULT:"):])
+
+    @pytest.mark.parametrize("variant", ["dense", "compact", "staleness"])
+    def test_none_bit_parity_under_mesh(self, result, variant):
+        rec = result[variant]
+        assert rec["default"]["comm_none"] and rec["none"]["comm_none"]
+        assert rec["default"]["events"] == rec["none"]["events"]
+        assert rec["default"]["omega_hex"] == rec["none"]["omega_hex"]
+
+    def test_int8_residual_client_sharded(self, result):
+        rec = result["int8_mesh"]
+        assert rec["comm_shape"] == [8, 5]
+        assert "clients" in rec["comm_sharding"]
+        assert rec["omega_finite"]
+
+    def test_mesh_conservation(self, result):
+        assert result["mesh_conservation_max_err"] < 2e-4
+
+
+class TestEngineIntegration:
+    def test_tree_layout_rejected(self):
+        n = 8
+        data, params0, loss_fn = make_least_squares(n, 8, 5)
+        cfg = dataclasses.replace(_variant_cfgs(n)["dense"],
+                                  consensus_compress="int8")
+        with pytest.raises(ValueError, match="flat"):
+            init_state(cfg, params0)  # no spec= → tree layout
+        spec = make_flat_spec(params0)
+        state = init_state(cfg, params0, spec=spec)
+        assert state.comm.shape == (n, spec.dim)
+        with pytest.raises(ValueError, match="flat"):
+            make_round_fn(cfg, loss_fn, data)  # no spec= → tree layout
+
+    @pytest.mark.parametrize("mode", ["bf16", "int8"])
+    def test_compressed_tracks_fp32_omega(self, mode):
+        n, rounds = 16, 20
+        data, params0, loss_fn = make_least_squares(n, 8, 5)
+        spec = make_flat_spec(params0)
+        base = _variant_cfgs(n)["compact"]
+        omegas = {}
+        for m in ("none", mode):
+            cfg = dataclasses.replace(base, consensus_compress=m)
+            state = init_state(cfg, params0, spec=spec)
+            rf = make_round_fn(cfg, loss_fn, data, spec=spec)
+            for _ in range(rounds):
+                state, _ = rf(state)
+            omegas[m] = np.asarray(state.omega, np.float64)
+        scale = max(float(np.abs(omegas["none"]).max()), 1e-6)
+        drift = float(np.abs(omegas[mode] - omegas["none"]).max()) / scale
+        assert drift < 5e-2, \
+            f"{mode} ω drifted {drift:.3%} from the fp32 trajectory"
+
+    def test_residual_checkpoint_roundtrip(self, tmp_path):
+        from repro.checkpoint.store import load_checkpoint, \
+            save_checkpoint
+        n = 8
+        data, params0, loss_fn = make_least_squares(n, 8, 5)
+        spec = make_flat_spec(params0)
+        cfg = dataclasses.replace(_variant_cfgs(n)["dense"],
+                                  consensus_compress="int8")
+        state = init_state(cfg, params0, spec=spec)
+        rf = make_round_fn(cfg, loss_fn, data, spec=spec)
+        for _ in range(3):
+            state, _ = rf(state)
+        assert np.abs(np.asarray(state.comm)).max() > 0  # EF is live
+        path = save_checkpoint(str(tmp_path), 3, state)
+        template = init_state(cfg, params0, spec=spec)
+        restored = load_checkpoint(path, template)
+        np.testing.assert_array_equal(np.asarray(restored.comm),
+                                      np.asarray(state.comm))
+        assert restored.comm.dtype == jnp.float32
+
+    def test_wire_bytes_model(self):
+        none = consensus_wire_bytes(64, mode="none", world_size=2)
+        i8 = consensus_wire_bytes(64, mode="int8", world_size=2,
+                                  block=256)
+        b16 = consensus_wire_bytes(64, mode="bf16", world_size=2)
+        assert i8["payload_link_bytes"] == none["payload_link_bytes"] / 4
+        assert i8["payload_link_bytes"] / none["payload_link_bytes"] \
+            <= 0.3
+        assert b16["payload_link_bytes"] == none["payload_link_bytes"] / 2
+        assert i8["overhead_link_bytes"] > 0  # the shared-scale MAX term
+        # Single device: no cross-device wire, uplink still compresses.
+        solo = consensus_wire_bytes(64, mode="int8", world_size=1)
+        assert solo["total_link_bytes"] == 0.0
+        assert solo["uplink_bytes_per_client"] < 64 * 4

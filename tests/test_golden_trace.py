@@ -1,13 +1,16 @@
 """Golden-trace regression: fixed-seed 30-round N=64 FedBack runs.
 
-Three traces are pinned — the compacted synchronous engine (deferral
+Four traces are pinned — the compacted synchronous engine (deferral
 queue + adaptive capacity, flat layout), the stale-tolerant engine
 at ``max_staleness=2`` (delay pipeline + commit-time controller
-measurements on top of the same compacted round), and the **ragged**
+measurements on top of the same compacted round), the **ragged**
 compacted engine (Dirichlet-drawn heterogeneous shard sizes pooled
 into one CSR buffer — size-bucketed masked solves through the capacity
-slots), so future PRs can't silently change ragged numerics.  Each is
-replayed
+slots), so future PRs can't silently change ragged numerics, and the
+**int8 compressed-consensus** engine (``consensus_compress="int8"``,
+core/compress.py: quantized z-deltas + error-feedback residual on the
+same compacted round), so quantizer or residual refactors can't
+silently move the compressed trajectory.  Each is replayed
 against a checked-in record: the full event stream (bit-exact), the
 deferral/in-flight trajectories, and the final server ω (sha256 of the
 fp32 bytes plus a value-level comparison).  Any silent numerical drift
@@ -37,6 +40,7 @@ GOLDEN_PATHS = {
     "sync": os.path.join(GOLDEN_DIR, "fedback_n64_r30.json"),
     "async_s2": os.path.join(GOLDEN_DIR, "fedback_async_n64_r30.json"),
     "ragged": os.path.join(GOLDEN_DIR, "fedback_ragged_n64_r30.json"),
+    "int8": os.path.join(GOLDEN_DIR, "fedback_int8_n64_r30.json"),
 }
 N, ROUNDS = 64, 30
 
@@ -67,6 +71,8 @@ def _run_trace(variant: str = "sync"):
                    rho=1.0, lr=0.1, momentum=0.0, epochs=2, batch_size=4,
                    seed=0, compact=True, capacity_slack=1.25,
                    max_staleness=2 if variant == "async_s2" else None,
+                   consensus_compress="int8" if variant == "int8"
+                   else "none",
                    controller=ControllerConfig(K=0.5, alpha=0.9))
     state = init_state(cfg, params0, spec=spec)
     round_fn = make_round_fn(cfg, ls, data, spec=spec, ragged=ragged)
@@ -105,7 +111,8 @@ def _record(events, omega, deferred, inflight) -> dict:
 
 
 class TestGoldenTrace:
-    @pytest.mark.parametrize("variant", ["sync", "async_s2", "ragged"])
+    @pytest.mark.parametrize("variant",
+                             ["sync", "async_s2", "ragged", "int8"])
     def test_fixed_seed_run_matches_golden(self, request, variant):
         golden_path = GOLDEN_PATHS[variant]
         events, omega, deferred, inflight = _run_trace(variant)
