@@ -29,6 +29,12 @@ them honest:
 * **fused commit** — ``compact_fused.fused_parity_bitexact`` (the fused
   gather→ADMM→scatter commit tracking the three-pass reference bit for
   bit) and ``compact_fused.roofline_within_15pct`` must hold;
+* **host backend** — ``host_parity.host_parity_bitexact`` (the
+  streaming host-state round tracking the device backend bit for bit)
+  and each ``host_stream_*`` section's ``bytes_match_plan`` /
+  ``within_budget`` / ``device_state_sub_full_matrix`` flags gate
+  unconditionally; the streamed per-round transfer counters are
+  deterministic (2·C·D·4 up, 3·C·D·4 down) and may never increase;
 * **serving** — ``serve_parity.serve_parity_bitexact`` (degenerate
   trace ≡ sync engine) and ``serve_bursty.conservation_ok`` gate
   unconditionally; tick-denominated p50/p99 latencies are
@@ -94,7 +100,23 @@ ROUND_SCHEMA = {
     "comparison": ("solver_rows_ratio", "speedup_per_round"),
     "async_parity": ("s0_matches_sync_compact",),
     "sweep": ("steady_us",),
+    "host_stream_n65536": ("per_round_us", "solver_rows_per_round",
+                           "streamed_h2d_bytes_per_round",
+                           "streamed_d2h_bytes_per_round",
+                           "bytes_match_plan", "within_budget",
+                           "device_state_sub_full_matrix"),
+    "host_stream_n1m": ("per_round_us", "solver_rows_per_round",
+                        "streamed_h2d_bytes_per_round",
+                        "streamed_d2h_bytes_per_round",
+                        "bytes_match_plan", "within_budget",
+                        "device_state_sub_full_matrix"),
+    "host_parity": ("host_parity_bitexact",),
 }
+
+#: Host-backend streamed transfer counters: deterministic (a pure
+#: function of C and D), so like solver rows they may never increase.
+HOST_STREAM_BYTE_KEYS = ("streamed_h2d_bytes_per_round",
+                         "streamed_d2h_bytes_per_round")
 
 
 #: BENCH_serve.json sections/keys the serving-engine gate reads
@@ -441,6 +463,20 @@ def compare_round(base: dict, fresh: dict, gate: Gate, *,
             else:
                 gate.ok(f"round: {section} solver HBM bytes {f_hbm} <= "
                         f"{b_hbm}")
+        # Host-backend streamed bytes: deterministic per-round transfer
+        # counters (2·C·D·4 up, 3·C·D·4 down) — any increase means the
+        # streaming round started moving rows the plan doesn't price.
+        for key in HOST_STREAM_BYTE_KEYS:
+            b_sb, f_sb = entry.get(key), fresh_entry.get(key)
+            if not isinstance(b_sb, numbers.Real):
+                continue
+            if not isinstance(f_sb, numbers.Real):
+                gate.fail(f"round: {section}.{key} missing fresh")
+            elif f_sb > b_sb:
+                gate.fail(f"round: {section} {key} increased "
+                          f"{b_sb} -> {f_sb} (any increase fails)")
+            else:
+                gate.ok(f"round: {section} {key} {f_sb} <= {b_sb}")
     parity = fresh.get("async_parity", {})
     if parity.get("s0_matches_sync_compact") is not True:
         gate.fail("round: async_parity.s0_matches_sync_compact is not "
@@ -471,6 +507,27 @@ def compare_round(base: dict, fresh: dict, gate: Gate, *,
                       "fresh report")
         else:
             gate.ok(f"round: {meaning}")
+    if fresh.get("host_parity", {}).get("host_parity_bitexact") is not True:
+        gate.fail("round: host_parity.host_parity_bitexact is not true "
+                  "in the fresh report")
+    else:
+        gate.ok("round: host backend tracks the device backend bit for "
+                "bit (events AND fp32 ω/θ/λ/z_prev)")
+    for section in ("host_stream_n65536", "host_stream_n1m"):
+        entry = fresh.get(section, {})
+        for flag, meaning in (
+                ("bytes_match_plan",
+                 "measured transfers equal the planned byte model"),
+                ("within_budget",
+                 "planned row stream within the 8·C·D·4 budget"),
+                ("device_state_sub_full_matrix",
+                 "device-resident client state below one full (N, D) "
+                 "matrix")):
+            if entry.get(flag) is not True:
+                gate.fail(f"round: {section}.{flag} is not true in the "
+                          "fresh report")
+            else:
+                gate.ok(f"round: {section} — {meaning}")
 
 
 def compare_kernels(base: dict, fresh: dict, gate: Gate, *,

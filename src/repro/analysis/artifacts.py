@@ -44,20 +44,27 @@ class ConfigKey:
     shards: str   # "uniform" | "ragged"
     devices: int = 1
     compress: str = "none"  # consensus wire ("none" | "bf16" | "int8")
+    backend: str = "device"  # client-state residency ("device" | "host")
 
     @property
     def name(self) -> str:
         base = (f"{self.path}-{self.layout}-{self.timing}-"
                 f"{self.shards}-{self.devices}d")
-        # Suffix only when compressing, so the pre-existing baseline
-        # keys (all uncompressed) stay stable.
-        return base if self.compress == "none" else \
-            f"{base}-{self.compress}"
+        # Suffix only when compressing / host-offloaded, so the
+        # pre-existing baseline keys (all device, uncompressed) stay
+        # stable.
+        if self.compress != "none":
+            base = f"{base}-{self.compress}"
+        return base if self.backend == "device" else f"{base}-host"
 
     @property
     def kernels_on(self) -> bool:
-        """Policy: flat-layout rounds run the fused Pallas kernels."""
-        return self.layout == "flat"
+        """Policy: flat-layout *device* rounds run the fused Pallas
+        kernels.  The host backend's streamed solve program runs at
+        working-set width on whatever device serves it — the (N, D)
+        kernels never see the full state, so the kernel policy does
+        not apply."""
+        return self.layout == "flat" and self.backend == "device"
 
 
 def _matrix(devices=(1, 2)) -> tuple:
@@ -85,12 +92,25 @@ def _compress_matrix() -> tuple:
     return tuple(legs)
 
 
+def _host_matrix() -> tuple:
+    """Host-offloaded client-state legs (compact flat single-device
+    only — the streamed working set reuses the CompactPlan slots, and
+    the host buffers live on this process's RAM)."""
+    return (
+        ConfigKey("compact", "flat", "sync", "uniform", 1, "none", "host"),
+        ConfigKey("compact", "flat", "async", "ragged", 1, "none", "host"),
+        ConfigKey("compact", "flat", "sync", "uniform", 1, "int8", "host"),
+        ConfigKey("compact", "flat", "async", "ragged", 1, "int8", "host"),
+    )
+
+
 #: All supported configurations (nightly): the 48-point uncompressed
-#: product plus the flat compressed-consensus legs.  ``timing="serve"``
-#: is the admission step of the rounds-as-a-service scheduler
-#: (``core.schedule``): the same round program taking the tick's (N,)
-#: bool arrival mask as a runtime operand.
-FULL_MATRIX = _matrix() + _compress_matrix()
+#: product plus the flat compressed-consensus legs and the
+#: host-offloaded state legs.  ``timing="serve"`` is the admission
+#: step of the rounds-as-a-service scheduler (``core.schedule``): the
+#: same round program taking the tick's (N,) bool arrival mask as a
+#: runtime operand.
+FULL_MATRIX = _matrix() + _compress_matrix() + _host_matrix()
 
 #: PR-gate subset: the canonical fused round, the compacted round, the
 #: kitchen sink (compact+async+ragged), the tree layout (pallas-free
@@ -110,6 +130,10 @@ FAST_MATRIX = (
     ConfigKey("dense", "flat", "sync", "uniform", 1, "int8"),
     ConfigKey("dense", "flat", "sync", "uniform", 2, "int8"),
     ConfigKey("dense", "flat", "sync", "uniform", 2, "bf16"),
+    # Host-offloaded client state: the streamed solve program of the
+    # canonical compact round and the kitchen-sink async+ragged leg.
+    ConfigKey("compact", "flat", "sync", "uniform", 1, "none", "host"),
+    ConfigKey("compact", "flat", "async", "ragged", 1, "none", "host"),
 )
 
 MATRICES = {"fast": FAST_MATRIX, "full": FULL_MATRIX}
@@ -181,6 +205,7 @@ def build_config(key: ConfigKey, *, n: int = DEFAULT_N,
         # flat round commits through the fused megakernel.
         fused_gss=key.kernels_on and key.path == "compact",
         consensus_compress=key.compress,
+        state_backend=key.backend,
     )
     kw.update(overrides or {})
     return FLConfig(**kw)
@@ -219,22 +244,39 @@ def build_artifact(key: ConfigKey, *, n: int = DEFAULT_N,
     common: dict = dict(mesh=mesh, spec=spec, ragged=ragged,
                         arrivals_arg=serve,
                         body_transform=body_transform)
-    # The serve step takes the tick's arrival mask as a runtime
-    # operand; any representative (N,) bool aval traces it.
-    example_args = ((state, jax.numpy.ones((n,), bool)) if serve
-                    else (state,))
-    traced = make_round_fn(cfg, loss_fn, data, jit=False, **common)
-    jaxpr = jax.make_jaxpr(traced)(*example_args)
-
     compiled_text = None
     cost: dict = {}
     round_fn = None
-    if compile:
+    if key.backend == "host":
+        # The host round is glue (numpy row copies + three jitted
+        # programs); what the rule engine must vet is the streamed
+        # *solve* program — the per-round hot loop that touches the
+        # (C, D) working set.  ``body_transform`` already wrapped it
+        # inside make_round_fn, so tracing ``solve_fn`` sees the
+        # mutation.  The glue-layer streaming transfers live outside
+        # every jaxpr by design; HostTransferBudget prices them from
+        # ``round_fn.planned_bytes`` instead.
         round_fn = make_round_fn(cfg, loss_fn, data, jit=True,
                                  donate=donate, **common)
-        compiled = round_fn.lower(*example_args).compile()
-        compiled_text = compiled.as_text()
-        cost = cost_analysis_dict(compiled.cost_analysis())
+        solve_args = round_fn.solve_example_args()
+        jaxpr = jax.make_jaxpr(round_fn.solve_fn)(*solve_args)
+        if compile:
+            compiled = round_fn.solve_step.lower(*solve_args).compile()
+            compiled_text = compiled.as_text()
+            cost = cost_analysis_dict(compiled.cost_analysis())
+    else:
+        # The serve step takes the tick's arrival mask as a runtime
+        # operand; any representative (N,) bool aval traces it.
+        example_args = ((state, jax.numpy.ones((n,), bool)) if serve
+                        else (state,))
+        traced = make_round_fn(cfg, loss_fn, data, jit=False, **common)
+        jaxpr = jax.make_jaxpr(traced)(*example_args)
+        if compile:
+            round_fn = make_round_fn(cfg, loss_fn, data, jit=True,
+                                     donate=donate, **common)
+            compiled = round_fn.lower(*example_args).compile()
+            compiled_text = compiled.as_text()
+            cost = cost_analysis_dict(compiled.cost_analysis())
 
     capacity = c_min = None
     if cfg.compact:

@@ -49,6 +49,10 @@ TRACED_SCOPES: dict = {
     "core/compact.py": (
         "adaptive_limit", "compact_plan", "queue_update", "gather_rows",
         "scatter_rows", "solve_slots", "slice_rows", "block"),
+    # Only the three jitted programs — the surrounding glue moves rows
+    # with numpy on purpose (that IS the host backend).
+    "core/hoststate.py": ("_plan", "_solve", "_aggregate", "_cat",
+                          "solver", "masked_solver"),
     "kernels/admm_update.py": (
         "_kernel3", "_kernel2", "admm_update", "admm_update_sharded"),
     "kernels/trigger_norms.py": (

@@ -28,9 +28,15 @@ contract:
                           consensus + RNG + scalar allowance, and no
                           all-gather bigger than a control vector
                           (the replicated pool must never be gathered);
-- ``no-host-transfers``   no ``device_put``/callback primitives in the
-                          round jaxpr, no infeed/outfeed/send/recv or
-                          python-callback custom-calls in the HLO.
+- ``host-transfer-budget`` no ``device_put``/callback primitives staged
+                          in the round jaxpr, no infeed/outfeed/
+                          send/recv or python-callback custom-calls in
+                          the HLO — on *any* backend.  Host-backend
+                          legs additionally price their glue-layer row
+                          streaming against the planned-byte model:
+                          the per-round H2D+D2H row stream must fit
+                          8·C·D·4 B (tiles of the (C, D) working set,
+                          never the (N, D) state).
 
 Adding a rule = adding a dataclass here and appending an instance to
 ``RULES`` (see docs/analysis.md).
@@ -142,10 +148,16 @@ class FullWidthSweepBudget:
     name: str = "no-full-width-sweeps"
     dense_budget: int = 1
     compact_budget: int = 0
+    host_budget: int = 0  # the streamed solve program is (C, D) only
     ef_extra: int = 4  # δ carry-in (sub+add) + residual (sub) + fold (add)
     prims: tuple = ("add", "sub", "mul")
 
     def applies(self, art) -> bool:
+        if getattr(art.key, "backend", "device") == "host":
+            # The host leg's jaxpr is the streamed solve program — a
+            # single (N, D) op in it means the full state leaked onto
+            # the device, so the rule applies with a zero budget.
+            return art.world_size == 1
         return art.kernels_on and art.world_size == 1
 
     def check(self, art) -> RuleResult:
@@ -154,10 +166,13 @@ class FullWidthSweepBudget:
         shapes = H.toplevel_elementwise_shapes(art.jaxpr,
                                                prims=self.prims)
         full = [s for s in shapes if tuple(s) == (art.n, art.dim)]
-        budget = (self.compact_budget if art.cfg.compact
-                  else self.dense_budget)
-        if getattr(art.cfg, "consensus_compress", "none") != "none":
-            budget += self.ef_extra
+        if getattr(art.key, "backend", "device") == "host":
+            budget = self.host_budget  # EF algebra runs server-side
+        else:
+            budget = (self.compact_budget if art.cfg.compact
+                      else self.dense_budget)
+            if getattr(art.cfg, "consensus_compress", "none") != "none":
+                budget += self.ef_extra
         violations = [] if len(full) <= budget else [
             f"{art.key.name}: {len(full)} top-level (N={art.n}, "
             f"D={art.dim}) elementwise sweeps, budget {budget}"]
@@ -225,15 +240,27 @@ def required_alias_avals(art) -> Counter:
 @dataclasses.dataclass(frozen=True)
 class DonationAudit:
     """Every live state buffer must alias an input in the compiled
-    module — a dropped donation doubles the (N, D) working set."""
+    module — a dropped donation doubles the (N, D) working set.
+
+    Device legs only.  The host backend's solve program takes the
+    working set as C/t-row *tiles* and concatenates them inside the
+    program, so no parameter shares a shape with any output — XLA
+    aliasing is whole-buffer, and donating the tiles frees them early
+    instead of aliasing them.  The (N, D) matrices it protects on the
+    device legs never enter a program on the host legs at all.
+    """
 
     name: str = "donated-state-aliases"
 
     def applies(self, art) -> bool:
-        return art.compiled_text is not None
+        return (art.compiled_text is not None
+                and getattr(art.key, "backend", "device") == "device")
 
     def check(self, art) -> RuleResult:
         if not self.applies(art):
+            if getattr(art.key, "backend", "device") == "host":
+                return _skip(self.name, "host backend: streamed tiles "
+                             "cannot alias full-width outputs")
             return _skip(self.name, "no compiled module")
         text = art.compiled_text
         aliases = H.parse_input_output_aliases(text)
@@ -357,14 +384,30 @@ class CollectiveBudget:
 
 
 @dataclasses.dataclass(frozen=True)
-class HostTransferBan:
-    """The round must stay on device: no transfer or callback staging
-    in the jaxpr, no host-boundary ops in the compiled module."""
+class HostTransferBudget:
+    """Transfers are either *staged* (inside a traced program) or
+    *planned* (the host backend's glue-layer row streaming).
 
-    name: str = "no-host-transfers"
+    Staged transfers are banned everywhere: no transfer or callback
+    primitives in the jaxpr, no host-boundary ops in the compiled
+    module.  On device-backend legs that is the whole rule — the
+    round must stay on device (the old blanket ``no-host-transfers``
+    contract).
+
+    Host-backend legs move rows by design, but only through the glue
+    layer *between* the jitted programs, and only working-set-sized
+    tiles: the planned per-round row stream (θ/λ up, θ'/λ⁺/z down —
+    5·C·D·4 B) must fit the 8·C·D·4 B budget.  A full-width (N, D)
+    transfer cannot fit the budget and cannot hide in a program
+    either — a ``device_put`` staged inside the solve jaxpr turns the
+    rule red just like on the device legs.
+    """
+
+    name: str = "host-transfer-budget"
     banned_prims: tuple = ("device_put", "io_callback", "pure_callback",
                            "debug_callback", "callback", "infeed",
                            "outfeed")
+    row_budget_factor: int = 8  # × C·D·4 B per round
 
     def applies(self, art) -> bool:
         return True
@@ -387,8 +430,26 @@ class HostTransferBan:
                 violations.append(
                     f"{art.key.name}: {hlo_ops} host-boundary op(s) in "
                     f"the compiled module")
-        return _result(self.name, violations,
-                       {"jaxpr": staged, "hlo_host_ops": hlo_ops})
+        metrics: dict = {"jaxpr": staged, "hlo_host_ops": hlo_ops,
+                         "backend": getattr(art.key, "backend", "device")}
+        if (getattr(art.key, "backend", "device") == "host"
+                and art.round_fn is not None):
+            planned = art.round_fn.planned_bytes
+            streamed = (planned["row_stream_h2d"]
+                        + planned["row_stream_d2h"])
+            budget = (self.row_budget_factor
+                      * art.capacity * art.dim * 4)
+            metrics.update(
+                planned_row_stream_bytes=streamed,
+                row_stream_budget=budget,
+                server_pass_bytes=(planned["server_pass_h2d"]
+                                   + planned["server_pass_d2h"]))
+            if streamed > budget:
+                violations.append(
+                    f"{art.key.name}: {streamed} planned row-stream "
+                    f"bytes/round exceeds the {budget} B budget "
+                    f"({self.row_budget_factor}·C·D·4)")
+        return _result(self.name, violations, metrics)
 
 
 #: The engine's performance contract, in evaluation order.
@@ -398,7 +459,7 @@ RULES = (
     DtypeBan(),
     DonationAudit(),
     CollectiveBudget(),
-    HostTransferBan(),
+    HostTransferBudget(),
 )
 
 

@@ -47,6 +47,12 @@ from .fedback import (  # noqa: F401
     make_round_fn,
     run_rounds,
 )
+from .hoststate import (  # noqa: F401
+    host_state_from_tree,
+    host_state_to_device,
+    init_host_state,
+    make_host_round_fn,
+)
 from .schedule import (  # noqa: F401
     ServeReport,
     TraceConfig,
@@ -58,6 +64,7 @@ from .schedule import (  # noqa: F401
 from .state import (  # noqa: F401
     DeferQueue,
     FLState,
+    HostState,
     InFlight,
     RoundMetrics,
     delay_schedule,

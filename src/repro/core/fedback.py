@@ -182,6 +182,17 @@ class FLConfig:
     #            (spec=) only.
     compress_block: int = 256  # per-block int8 scale granularity
     #            (coordinates per shared fp32 scale; clamped to D)
+    state_backend: str = "device"  # where the (N, D) client matrices
+    #            live ("device"|"host").  "device" is the bit-exact
+    #            default: FLState on device, one jitted round program.
+    #            "host" keeps θ/λ/z_prev/comm in host numpy buffers and
+    #            streams only the (C, D) active-row working set per
+    #            round (core/hoststate.py) — same events and fp32 state
+    #            bits, device memory O(C·D) instead of O(N·D).
+    #            Compact + flat layout only, single host (no mesh).
+    stream_tiles: int = 2  # host backend: H2D chunks the (C, D) row
+    #            stream is double-buffered into (copy/compute overlap
+    #            granularity; never affects the solve width or bits)
     seed: int = 0
 
     def selection_name(self) -> str:
@@ -228,6 +239,15 @@ def init_state(cfg: FLConfig, params0, *, mesh=None,
     a (D,) vector (pass the same spec to ``make_round_fn``).
     """
     n = cfg.n_clients
+    if cfg.state_backend not in ("device", "host"):
+        raise ValueError(f"unknown state_backend: {cfg.state_backend!r} "
+                         "(expected 'device' or 'host')")
+    if cfg.state_backend == "host":
+        from .hoststate import init_host_state
+        if mesh is not None:
+            raise ValueError("state_backend='host' is a single-host "
+                             "backend (mesh must be None)")
+        return init_host_state(cfg, params0, spec=spec)
     if check_mode(cfg.consensus_compress) != "none" and spec is None:
         raise ValueError(
             "consensus_compress="
@@ -434,6 +454,16 @@ def make_round_fn(cfg: FLConfig, loss_fn: Callable, data: dict[str, Any],
 
     Returns round_fn(state[, ctrl_overrides]) -> (state, RoundMetrics).
     """
+    if cfg.state_backend not in ("device", "host"):
+        raise ValueError(f"unknown state_backend: {cfg.state_backend!r} "
+                         "(expected 'device' or 'host')")
+    if cfg.state_backend == "host":
+        from .hoststate import make_host_round_fn
+        return make_host_round_fn(
+            cfg, loss_fn, data, jit=jit, mesh=mesh,
+            client_axis=client_axis, donate=donate, ctrl_arg=ctrl_arg,
+            arrivals_arg=arrivals_arg, spec=spec, ragged=ragged,
+            body_transform=body_transform)
     n = cfg.n_clients
     if ragged is not None:
         if ragged.n_clients != n:

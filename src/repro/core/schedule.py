@@ -181,7 +181,7 @@ def serve(round_fn, state, trace, *, warmup: bool = False,
     the program and fetches the tick's ``committed`` mask plus the
     scalar queue/pipeline depths — nothing else crosses the host
     boundary, so the step itself stays transfer-free (the tracecheck
-    ``no-host-transfers`` rule inspects it).
+    ``host-transfer-budget`` rule inspects it).
 
     ``warmup=True`` compiles the step on a deep copy of ``state``
     before timing starts (safe under donation — only the copy's

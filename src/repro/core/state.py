@@ -23,10 +23,12 @@ replicated under the mesh layout.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.utils.pytree import tree_zeros_like
 
@@ -151,6 +153,91 @@ class FLState(NamedTuple):
     #                   materialized by init_state iff
     #                   cfg.consensus_compress != "none" (None = the
     #                   uncompressed wire, no residual state).
+
+
+@dataclasses.dataclass
+class HostState:
+    """Host-offloaded client state (``FLConfig.state_backend="host"``).
+
+    The client-stacked (N, D) matrices — θ, λ, z_prev, the EF residual
+    ``comm`` and the parked in-flight payloads — live in host ``numpy``
+    buffers; only ω, the controller/queue/pipeline *vectors* (O(N)
+    scalars per client, not O(N·D) rows) and the per-round (C, D)
+    active-row working set ever reach device memory.  The streaming
+    round (``repro.core.hoststate``) gathers the ``CompactPlan``'s C
+    rows out of these buffers, streams them to the device in
+    double-buffered tiles, solves at the same capacity width as the
+    device engine, and scatters results back in place — the buffers are
+    mutated between rounds, which is exactly why this is a (mutable)
+    dataclass and not part of the immutable ``FLState`` pytree.
+
+    ``distances`` caches the next round's trigger distances
+    ‖ω − z_i^prev‖: the server's consensus and trigger passes both read
+    the full z_prev, so the streaming round computes them together in
+    ONE full-width pass at the end of round k (ω_k first, then the
+    round-k+1 distances from ω_k and the same z rows) instead of
+    streaming z_prev twice per round.  It is derived state — never
+    checkpointed, recomputed on restore (``from_checkpoint_tree``).
+
+    ``inflight`` reuses the :class:`InFlight` container with its
+    delay/ttl/hist vectors on device and its θ/λ/z payload *matrices* as
+    host numpy buffers (the commit pipeline is a per-row copy between
+    host buffers, no device round-trip).
+    """
+
+    theta: np.ndarray  # (N, D) fp32 host
+    lam: np.ndarray  # (N, D) fp32 host
+    z_prev: np.ndarray  # (N, D) fp32 host
+    omega: jax.Array  # (D,) device
+    ctrl: ControllerState  # per-client (N,) vectors, device
+    rng: jax.Array
+    round: jax.Array  # () int32
+    queue: DeferQueue  # (N,) vectors, device
+    distances: jax.Array | None = None  # (N,) fp32 device — NEXT round's
+    #                       trigger distances, pipelined from the
+    #                       aggregate pass; None = not yet computed
+    #                       (fresh init / just restored) — the round
+    #                       engine fills it in with one trigger pass
+    inflight: InFlight | None = None  # delay/ttl/hist on device, parked
+    #                                   θ/λ/z payloads as host numpy
+    comm: np.ndarray | None = None  # (N, D) fp32 host — EF residual
+
+    def to_checkpoint_tree(self) -> "FLState":
+        """FLState-shaped pytree with the host buffers as numpy leaves.
+
+        ``checkpoint.store.save_checkpoint`` device_gets the tree —
+        numpy leaves pass through untouched, so the (N, D) matrices are
+        written straight from host memory with no device round-trip.
+        The tree structure equals a device-backend ``FLState`` with the
+        same config, so checkpoints resume across backends both ways.
+        ``distances`` is derived state and deliberately not stored.
+        """
+        return FLState(theta=self.theta, lam=self.lam, z_prev=self.z_prev,
+                       omega=self.omega, ctrl=self.ctrl, rng=self.rng,
+                       round=self.round, queue=self.queue,
+                       inflight=self.inflight, comm=self.comm)
+
+    def device_state_bytes(self) -> int:
+        """Live device bytes of the *persistent* state: O(N) vectors +
+        the (D,) server ω — no (N, D) client matrix is device-resident
+        between rounds (the working set and the one full-width server
+        pass are transient within a round)."""
+        leaves = jax.tree.leaves(
+            (self.omega, self.ctrl, self.rng, self.round, self.queue,
+             self.distances,  # None (lazy) contributes no leaves
+             None if self.inflight is None else
+             (self.inflight.delay, self.inflight.ttl, self.inflight.hist)))
+        return sum(x.size * x.dtype.itemsize for x in leaves)
+
+    def host_state_bytes(self) -> int:
+        """Bytes of the host-resident (N, D) client matrices."""
+        mats = [self.theta, self.lam, self.z_prev]
+        if self.comm is not None:
+            mats.append(self.comm)
+        if self.inflight is not None:
+            mats += [self.inflight.theta, self.inflight.lam,
+                     self.inflight.z]
+        return sum(m.nbytes for m in mats)
 
 
 class RoundMetrics(NamedTuple):

@@ -25,6 +25,7 @@ from repro.utils.hlo import collective_inventory, total_collective_bytes
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 LINK_BW = 50e9  # bytes/s per ICI link (conservative single-link model)
+PCIE_BW = 32e9  # bytes/s host<->device (PCIe gen4 x16, sustained)
 
 
 def model_flops_per_device(cfg, *, mode: str, batch: int, seq: int,
@@ -154,6 +155,62 @@ def fedback_ragged_round_hbm_bytes(n_clients: int, solver_rows: int,
         "total_bytes": base["server_bytes"] + base["solver_state_bytes"]
         + solver_data,
         "data_rows_total": total_rows,
+    }
+
+
+def host_stream_bytes(n_clients: int, capacity: int, dim: int, *,
+                      compress: str = "none",
+                      data_bytes_per_client: int = 0,
+                      dtype_bytes: int = 4) -> dict[str, float]:
+    """Planned host<->device traffic of one host-backend round
+    (``state_backend="host"``, ``core.hoststate``) plus the modeled
+    stream/solve overlap of the double-buffered working set.
+
+    The byte model mirrors ``make_host_round_fn``'s
+    ``round_fn.planned_bytes`` exactly — the pair is what the
+    ``host-transfer-budget`` tracecheck rule and the BENCH_round gate
+    compare against measured transfer counters:
+
+    * row stream up:    θ, λ gather tiles            → 2·C·D·b
+    * row stream down:  θ', λ⁺, z working-set rows   → 3·C·D·b
+    * budget:           8·C·D·b (headroom for a future z_prev/EF tile)
+    * server pass up:   z_prev (plus the EF residual under
+                        ``consensus_compress``)       → N·D·b·{1,2}
+    * server pass down: the folded-back EF residual   → N·D·b·{0,1}
+
+    Training data never crosses per round — it is round-static and
+    stays device-resident, gathered by slot index inside the solve
+    program (the same dataflow as the device backend's compact block).
+
+    ``modeled_overlap_fraction`` is the share of the row stream a
+    double-buffered schedule can hide behind the solve compute:
+    min(t_solve, t_stream)/t_stream on the PCIe + HBM model.  The
+    benchmark reports the measured fraction next to it (≈ 0 on CPU,
+    where transfers are memcpys on the compute thread).
+    """
+    row_h2d = 2 * capacity * dim * dtype_bytes
+    row_d2h = 3 * capacity * dim * dtype_bytes
+    full_mult = 2 if compress != "none" else 1
+    server_h2d = n_clients * dim * dtype_bytes * full_mult
+    server_d2h = (n_clients * dim * dtype_bytes
+                  if compress != "none" else 0)
+    solver = fedback_round_hbm_bytes(
+        n_clients, capacity, dim,
+        data_bytes_per_client=data_bytes_per_client,
+        dtype_bytes=dtype_bytes)
+    t_stream = (row_h2d + row_d2h) / PCIE_BW
+    t_solve = solver["solver_bytes"] / HBM_BW
+    return {
+        "row_stream_h2d_bytes": row_h2d,
+        "row_stream_d2h_bytes": row_d2h,
+        "row_stream_budget_bytes": 8 * capacity * dim * dtype_bytes,
+        "server_pass_h2d_bytes": server_h2d,
+        "server_pass_d2h_bytes": server_d2h,
+        "device_working_set_bytes": 5 * capacity * dim * dtype_bytes,
+        "stream_s": t_stream,
+        "solve_s": t_solve,
+        "modeled_overlap_fraction": (
+            min(t_solve, t_stream) / max(t_stream, 1e-30)),
     }
 
 

@@ -37,6 +37,14 @@ pooled CSR buffer is run-independent like the rectangular shards, so
 ``make_sweep_fn(..., ragged=spec)`` vmaps state over runs while every
 run reads the same pool (``--ragged`` on the CLI).
 
+The host-offloaded backend (``--state-backend host``,
+``repro.core.hoststate``) does NOT compose with the scan-of-vmap: its
+round is jitted device programs glued by host-side numpy row
+gathers/scatters, which ``vmap``/``scan`` cannot trace through.  The
+CLI instead runs that grid sequentially — one streaming round engine
+per grid point — and prints the same CSV, so a million-client sweep
+fits one host at the cost of per-run compiles.
+
 CLI demo (quadratic problem, prints per-run realized rates):
 
     PYTHONPATH=src python -m repro.launch.sweep --n-clients 64 \
@@ -195,6 +203,16 @@ def main():
                          "persistent error-feedback residual; 'none' is "
                          "the exact fp32 aggregation (needs the flat "
                          "layout when != none)")
+    ap.add_argument("--state-backend", default="device",
+                    choices=("device", "host"),
+                    help="where the (N, D) client matrices live "
+                         "(repro.core.hoststate): 'host' keeps them in "
+                         "host RAM and streams a (C, D) working set "
+                         "through the CompactPlan slots — needs "
+                         "--compact and the flat layout, and runs the "
+                         "grid sequentially (one streaming engine per "
+                         "grid point) instead of as one scan-of-vmap "
+                         "program")
     ap.add_argument("--ragged", action="store_true",
                     help="heterogeneous client shards: per-client sizes "
                          "drawn seed-deterministically in [n/2, n] points "
@@ -235,6 +253,40 @@ def main():
     seeds = [int(s) for s in args.seeds.split(",")]
     gains = ([float(g) for g in args.gains.split(",")]
              if args.gains else None)
+
+    if args.state_backend == "host":
+        if args.tree_layout:
+            raise SystemExit("--state-backend host needs the flat "
+                             "(N, D) layout — drop --tree-layout")
+        if not args.compact:
+            raise SystemExit("--state-backend host needs --compact "
+                             "(the streaming round is built on the "
+                             "CompactPlan slot indices)")
+        if args.devices:
+            raise SystemExit("--state-backend host is a single-host "
+                             "backend — drop --devices (shard the "
+                             "device backend instead)")
+        from repro.core import run_rounds
+        grid = SweepGrid(seeds=tuple(seeds),
+                         gains=tuple(gains) if gains else None)
+        print("seed,K,target,realized_rate,realized_slack,queue_depth,"
+              "inflight_depth,final_train_loss")
+        for seed, k, tgt in grid.runs(cfg):
+            rcfg = dataclasses.replace(
+                cfg, seed=seed, participation=tgt, state_backend="host",
+                controller=cfg.controller._replace(K=k))
+            hstate = init_state(rcfg, params0, spec=spec)
+            host_rf = make_round_fn(rcfg, loss_fn, data, spec=spec,
+                                    ragged=ragged)
+            hstate, h = run_rounds(host_rf, hstate, args.rounds)
+            print(f"{seed},{k},{tgt},"
+                  f"{np.asarray(h.events, np.float32).mean():.3f},"
+                  f"{np.asarray(h.realized_slack).mean():.2f},"
+                  f"{int(np.asarray(h.num_deferred)[-1])},"
+                  f"{int(np.asarray(h.num_inflight)[-1])},"
+                  f"{float(np.asarray(h.train_loss)[-1]):.5f}")
+        return
+
     mesh = None
     if args.devices:
         from repro.sharding.clients import make_client_mesh

@@ -79,6 +79,23 @@ class FlatSpec:
         """
         return jnp.zeros((n, self.dim), jnp.float32)
 
+    def zeros_stacked_host(self, n: int) -> np.ndarray:
+        """Host-memory twin of :meth:`zeros_stacked`: an (n, D) fp32
+        ``numpy`` buffer.  The allocation primitive of the host-offloaded
+        state backend (``repro.core.hoststate``), where the client-
+        stacked matrices never live on device — a plain C-contiguous
+        array the streaming round gathers/scatters with fancy indexing.
+        """
+        return np.zeros((n, self.dim), np.float32)
+
+    def host_broadcast_rows(self, vec, n: int) -> np.ndarray:
+        """(D,) template → writable (n, D) fp32 host buffer, every row
+        an exact bitwise copy of ``vec`` (mirrors the device engine's
+        ``tree_broadcast_like`` init so both backends start identical).
+        """
+        row = np.asarray(vec, np.float32).reshape(1, self.dim)
+        return np.repeat(row, n, axis=0)
+
     def flatten_stacked(self, tree) -> jax.Array:
         """Stacked pytree (N, ...) leaves → contiguous (N, D) fp32."""
         leaves = self.treedef.flatten_up_to(tree)

@@ -287,13 +287,56 @@ class TestRuleEngineJaxpr:
     def test_matrices_are_consistent(self):
         # 48 uncompressed ({dense,compact}×{flat,tree}×{sync,async,
         # serve}×{uniform,ragged}×{1,2}d) + 11 compressed-consensus
-        # legs (analysis/artifacts._compress_matrix).
-        assert len(FULL_MATRIX) == 48 + 11
-        assert sum(k.compress != "none" for k in FULL_MATRIX) == 11
+        # legs (analysis/artifacts._compress_matrix) + 4 host-backend
+        # legs (analysis/artifacts._host_matrix).
+        assert len(FULL_MATRIX) == 48 + 11 + 4
+        assert sum(k.compress != "none" for k in FULL_MATRIX) == 11 + 2
+        assert sum(k.backend == "host" for k in FULL_MATRIX) == 4
         assert sum(k.compress != "none" for k in FAST_MATRIX) == 3
+        assert sum(k.backend == "host" for k in FAST_MATRIX) == 2
         assert set(FAST_MATRIX) <= set(FULL_MATRIX)
         names = [k.name for k in FULL_MATRIX]
         assert len(names) == len(set(names))
+
+    def test_host_leg_names_are_suffixed(self):
+        key = ConfigKey("compact", "flat", "sync", "uniform", 1,
+                        "none", "host")
+        assert key.name == "compact-flat-sync-uniform-1d-host"
+        assert not key.kernels_on  # kernel policy is device-only
+
+
+class TestRuleEngineHostLeg:
+    """The host-backend artifact is the streamed solve program: it
+    must carry zero (N, D) ops, zero staged transfers, and a planned
+    row stream inside the 8·C·D·4 B budget."""
+
+    @pytest.fixture(scope="class")
+    def host_art(self):
+        return build_artifact(
+            ConfigKey("compact", "flat", "sync", "uniform", 1,
+                      "none", "host"), compile=False)
+
+    def test_transfer_budget_green_with_headroom(self, host_art):
+        res = {r.rule: r for r in evaluate(host_art)}[
+            "host-transfer-budget"]
+        assert res.status == "pass", res.violations
+        assert res.metrics["backend"] == "host"
+        # 5·C·D·4 planned vs 8·C·D·4 allowed.
+        assert (res.metrics["planned_row_stream_bytes"]
+                == 5 * host_art.capacity * host_art.dim * 4)
+        assert (res.metrics["planned_row_stream_bytes"]
+                <= res.metrics["row_stream_budget"])
+
+    def test_solve_program_is_working_set_width(self, host_art):
+        res = {r.rule: r for r in evaluate(host_art)}[
+            "no-full-width-sweeps"]
+        assert res.status == "pass", res.violations
+        assert res.metrics["full_width_sweeps"] == 0
+        assert res.metrics["budget"] == 0
+
+    def test_all_rules_green(self, host_art):
+        for res in evaluate(host_art):
+            assert res.status != "fail", (res.rule, res.violations)
 
 
 # ---------------------------------------------------------------------------

@@ -25,13 +25,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.artifacts import ConfigKey, build_artifact
+from repro.analysis.artifacts import (
+    DEFAULT_DIM,
+    DEFAULT_N,
+    FAST_MATRIX,
+    ConfigKey,
+    build_artifact,
+)
 from repro.analysis.retrace import run_single_trace_check
 from repro.analysis.rules import DtypeBan, evaluate
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 DENSE_FLAT = ConfigKey("dense", "flat", "sync", "uniform", 1)
 COMPACT_FLAT = ConfigKey("compact", "flat", "sync", "uniform", 1)
+HOST_COMPACT = ConfigKey("compact", "flat", "sync", "uniform", 1,
+                         "none", "host")
 
 
 def failing_rules(art):
@@ -76,7 +84,31 @@ class TestSeededMutations:
 
         art = build_artifact(DENSE_FLAT, compile=False,
                              body_transform=host_staging)
-        assert failing_rules(art) == ["no-host-transfers"]
+        assert failing_rules(art) == ["host-transfer-budget"]
+
+    def test_stray_full_width_transfer_on_host_leg(self):
+        # Host-backend leg: stage a full (N, D) device_put inside the
+        # streamed solve program — the exact transfer the budget
+        # exists to ban (the planned row stream is (C, D) tiles only,
+        # never the whole client-state matrix).
+        def full_width_leak(solve):
+            def wrapped(omega, idx, keys_rows, th_tiles, lam_tiles):
+                stray = jax.device_put(
+                    np.zeros((DEFAULT_N, DEFAULT_DIM), np.float32))
+                return solve(omega + 0.0 * stray[0], idx, keys_rows,
+                             th_tiles, lam_tiles)
+            return wrapped
+
+        art = build_artifact(HOST_COMPACT, compile=False,
+                             body_transform=full_width_leak)
+        assert failing_rules(art) == ["host-transfer-budget"]
+
+    def test_unmutated_host_round_green(self):
+        # The host leg itself must trace green — its planned row
+        # stream (5·C·D·4 B) fits the 8·C·D·4 B budget — or the
+        # mutation above proves nothing.
+        art = build_artifact(HOST_COMPACT, compile=False)
+        assert failing_rules(art) == []
 
     def test_dropped_admm_kernel(self):
         # Unfusing the ADMM kernel is one mutation, two coupled
@@ -202,4 +234,4 @@ class TestCliEndToEnd:
                                       proc.stderr[-2000:])
         report = json.loads(out.read_text())
         assert report["lint"]["status"] == "pass"
-        assert len(report["configs"]) == 6
+        assert len(report["configs"]) == len(FAST_MATRIX)

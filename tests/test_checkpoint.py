@@ -7,7 +7,14 @@ garbage.  bf16 and mixed-dtype trees must restore exactly, a bf16
 checkpoint must resume into an fp32 template via a cast (and vice
 versa), and genuinely incompatible kinds (float row into an int32
 queue age) must be rejected loudly instead of corrupting state.
+
+The host state backend (core/hoststate.py) checkpoints through the
+same store with *numpy* (N, D) leaves — no device round-trip — and its
+FLState-shaped tree is structurally identical to a device checkpoint
+of the same config, so resumes cross backends both ways bit-exactly.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -130,6 +137,21 @@ class TestDtypes:
             load_checkpoint(path, {"a": jnp.zeros((2,)),
                                    "c": jnp.ones((2,))})
 
+    def test_bf16_sidecar_on_numpy_host_leaves(self, tmp_path):
+        """The sidecar path must work for trees whose leaves never
+        touched the device (host-backend checkpoints): an ml_dtypes
+        bf16 *numpy* matrix round-trips bit-exactly."""
+        import ml_dtypes
+        rng = np.random.default_rng(3)
+        tree = {"rows": rng.normal(size=(6, 4)).astype(ml_dtypes.bfloat16),
+                "aux": np.arange(6, dtype=np.int32)}
+        path = save_checkpoint(str(tmp_path), 0, tree)
+        restored = load_checkpoint(path, tree)
+        assert np.asarray(restored["rows"]).dtype == ml_dtypes.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(tree["rows"]).view(np.uint8),
+            np.asarray(restored["rows"]).view(np.uint8))
+
     def test_bf16_flstate_roundtrip(self, tmp_path):
         """Full FLState with bf16 client rows — the mixed-precision
         resume scenario the sidecar exists for."""
@@ -145,3 +167,108 @@ class TestDtypes:
             assert a.dtype == b.dtype
             np.testing.assert_array_equal(a.view(np.uint8),
                                           b.view(np.uint8))
+
+
+class TestHostBackendCheckpoint:
+    """Host-backend checkpoints: saved straight from host buffers (no
+    device round-trip of the (N, D) matrices) and resumable across
+    backends both ways, bit-exactly."""
+
+    N = 10
+
+    def _problem(self):
+        from repro.core import make_flat_spec
+        from repro.data import make_least_squares
+        data, params0, ls = make_least_squares(self.N, 6, 4)
+        return data, params0, ls, make_flat_spec(params0)
+
+    def _cfg(self, **kw):
+        from repro.core import ControllerConfig
+        base = dict(algorithm="fedback", n_clients=self.N,
+                    participation=0.5, rho=1.0, lr=0.1, momentum=0.0,
+                    epochs=1, batch_size=3, compact=True,
+                    consensus_compress="int8",
+                    controller=ControllerConfig(K=0.2, alpha=0.9))
+        base.update(kw)
+        return FLConfig(**base)
+
+    def _run(self, cfg, state, rounds):
+        from repro.core import make_round_fn
+        data, params0, ls, spec = self._problem()
+        fn = make_round_fn(cfg, ls, data, spec=spec)
+        for _ in range(rounds):
+            state, _ = fn(state)
+        return state
+
+    def _assert_state_equal(self, a, b):
+        ta = a.to_checkpoint_tree() if hasattr(a, "to_checkpoint_tree") \
+            else a
+        tb = b.to_checkpoint_tree() if hasattr(b, "to_checkpoint_tree") \
+            else b
+        for x, y in zip(jax.tree.leaves(ta), jax.tree.leaves(tb),
+                        strict=True):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_host_roundtrip_resumes_bitexact(self, tmp_path):
+        from repro.core import host_state_from_tree
+        data, params0, ls, spec = self._problem()
+        cfg = self._cfg(state_backend="host")
+        st = init_state(cfg, params0, spec=spec)
+        st = self._run(cfg, st, 2)
+        tree = st.to_checkpoint_tree()
+        # The store receives host buffers directly — numpy in …
+        assert isinstance(tree.theta, np.ndarray)
+        assert isinstance(tree.comm, np.ndarray)
+        path = save_checkpoint(str(tmp_path), 2, tree)
+        # … and hands numpy back out (device_get is the identity here).
+        loaded = load_checkpoint(path, tree)
+        assert isinstance(loaded.theta, np.ndarray)
+        resumed = host_state_from_tree(loaded, cfg, spec=spec)
+        final_a = self._run(cfg, resumed, 2)
+        final_b = self._run(cfg, st, 2)  # uninterrupted continuation
+        self._assert_state_equal(final_a, final_b)
+
+    def test_resume_device_checkpoint_on_host(self, tmp_path):
+        from repro.core import host_state_from_tree
+        data, params0, ls, spec = self._problem()
+        dev_cfg = self._cfg()
+        host_cfg = dataclasses.replace(dev_cfg, state_backend="host")
+        dev_st = self._run(dev_cfg,
+                           init_state(dev_cfg, params0, spec=spec), 2)
+        path = save_checkpoint(str(tmp_path), 2, dev_st)
+        host_template = init_state(host_cfg, params0,
+                                   spec=spec).to_checkpoint_tree()
+        loaded = load_checkpoint(path, host_template)
+        host_final = self._run(
+            host_cfg, host_state_from_tree(loaded, host_cfg, spec=spec), 2)
+        dev_final = self._run(dev_cfg, dev_st, 2)
+        self._assert_state_equal(dev_final, host_final)
+
+    def test_resume_host_checkpoint_on_device(self, tmp_path):
+        data, params0, ls, spec = self._problem()
+        dev_cfg = self._cfg()
+        host_cfg = dataclasses.replace(dev_cfg, state_backend="host")
+        host_st = self._run(host_cfg,
+                            init_state(host_cfg, params0, spec=spec), 2)
+        path = save_checkpoint(str(tmp_path), 2,
+                               host_st.to_checkpoint_tree())
+        dev_template = init_state(dev_cfg, params0, spec=spec)
+        loaded = load_checkpoint(path, dev_template)
+        loaded = jax.tree.map(jnp.asarray, loaded)
+        dev_final = self._run(dev_cfg, loaded, 2)
+        host_final = self._run(host_cfg, host_st, 2)
+        self._assert_state_equal(dev_final, host_final)
+
+    def test_async_park_buffers_roundtrip(self, tmp_path):
+        from repro.core import host_state_from_tree
+        data, params0, ls, spec = self._problem()
+        cfg = self._cfg(state_backend="host", max_staleness=2)
+        st = self._run(cfg, init_state(cfg, params0, spec=spec), 3)
+        tree = st.to_checkpoint_tree()
+        assert isinstance(tree.inflight.theta, np.ndarray)
+        path = save_checkpoint(str(tmp_path), 3, tree)
+        resumed = host_state_from_tree(load_checkpoint(path, tree), cfg,
+                                       spec=spec)
+        final_a = self._run(cfg, resumed, 2)
+        final_b = self._run(cfg, st, 2)
+        self._assert_state_equal(final_a, final_b)
